@@ -1,0 +1,155 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline deliverable).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+derives, per (arch × shape) on the single-pod mesh:
+
+    compute   = HLO_FLOPs_per_device / peak_FLOPs            [s]
+    memory    = HLO_bytes_per_device / HBM_bw                [s]
+    collective= collective_operand_bytes_per_device / link_bw [s]
+
+plus the dominant term, MODEL_FLOPS = 6·N·D (6·N_active·D for MoE), and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy).
+
+Hardware constants (TPU v5e, per the brief): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+
+FLOP/collective counts come from the *unrolled* measurement program when
+available (``cost_unrolled``; scanned modules undercount loop bodies) and
+otherwise from the layer-calibrated extrapolation (``cost_extrapolated``).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.shapes import SHAPES
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link
+HBM_PER_CHIP = 16e9      # v5e HBM capacity
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE); decode: D = global_batch
+    tokens per step, forward-only (2·N·D)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch          # one token per sequence
+    return 2.0 * n * tokens
+
+
+def load_cell(dry_dir: str, arch: str, shape: str, multi_pod: bool) -> dict | None:
+    pod = "multipod" if multi_pod else "singlepod"
+    path = os.path.join(dry_dir, f"{arch.replace('.', '_')}__{shape}__{pod}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def analyse_cell(rec: dict) -> dict | None:
+    if not rec.get("ok"):
+        return None
+    arch, shape_name = rec["arch"], rec["shape"]
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = rec["n_devices"]
+
+    source = None
+    if rec.get("cost_unrolled"):
+        cost, coll, source = (rec["cost_unrolled"],
+                              rec.get("collectives_unrolled", {}),
+                              "unrolled")
+    elif rec.get("cost_extrapolated"):
+        cost, coll, source = (rec["cost_extrapolated"],
+                              rec.get("collectives_extrapolated", {}),
+                              "extrapolated")
+    else:
+        cost, coll, source = rec.get("cost", {}), rec.get("collectives", {}), \
+            "scanned(undercounted)"
+
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes accessed", 0.0)
+    coll_dev = coll.get("total_operand_bytes", 0)
+    wire_dev = coll.get("total_wire_bytes", 0)
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / chips
+    t_total = max(terms.values())
+    mem = rec.get("memory", {}) or rec.get("memory_unrolled", {})
+    hbm_bytes = (mem.get("argument_size_in_bytes", 0)
+                 + mem.get("temp_size_in_bytes", 0)
+                 + mem.get("output_size_in_bytes", 0))
+    return {
+        "arch": arch, "shape": shape_name, "chips": chips,
+        "source": source,
+        "flops_per_dev": flops_dev,
+        "bytes_per_dev": bytes_dev,
+        "coll_operand_bytes_per_dev": coll_dev,
+        "coll_wire_bytes_per_dev": wire_dev,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf_dev,
+        "useful_ratio": (mf_dev / flops_dev) if flops_dev else 0.0,
+        "roofline_fraction": (mf_dev / PEAK_FLOPS) / t_total
+        if t_total > 0 else 0.0,
+        "hbm_bytes_per_dev": hbm_bytes,
+        "fits_hbm": hbm_bytes <= HBM_PER_CHIP if hbm_bytes else None,
+    }
+
+
+def run(out_dir: str = "experiments/bench",
+        dry_dir: str = "experiments/dryrun", verbose: bool = True) -> dict:
+    rows = []
+    missing = []
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        from repro.configs import shapes_for
+        for shape in shapes_for(cfg):
+            rec = load_cell(dry_dir, arch, shape.name, multi_pod=False)
+            if rec is None:
+                missing.append((arch, shape.name))
+                continue
+            row = analyse_cell(rec)
+            if row:
+                rows.append(row)
+            else:
+                missing.append((arch, shape.name))
+    out = {"rows": rows, "missing": missing,
+           "constants": {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+                         "link_bw": LINK_BW}}
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "roofline.json"), "w") as f:
+        json.dump(out, f)
+    if verbose:
+        print("— roofline (single-pod 16×16, per device) —")
+        print(f"  {'arch':22s} {'shape':12s} {'comp[s]':>9s} {'mem[s]':>9s} "
+              f"{'coll[s]':>9s} {'dom':>5s} {'useful':>7s} {'roof%':>6s} "
+              f"{'src':>14s}")
+        for r in rows:
+            print(f"  {r['arch']:22s} {r['shape']:12s} "
+                  f"{r['t_compute_s']:9.2e} {r['t_memory_s']:9.2e} "
+                  f"{r['t_collective_s']:9.2e} {r['dominant'][:4]:>5s} "
+                  f"{r['useful_ratio']:7.2f} "
+                  f"{100 * r['roofline_fraction']:6.1f} {r['source']:>14s}")
+        if missing:
+            print(f"  missing cells: {len(missing)} (dry-run incomplete)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

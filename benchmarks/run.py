@@ -1,0 +1,83 @@
+"""Benchmark orchestrator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/figure (DESIGN.md §7):
+    drift             — Fig. 5 + §IV-A numbers (RMSE / equilibrium / conv.)
+    isi               — Fig. 6 ISI histogram + depth-7 coverage
+    network_accuracy  — Table II accuracy parity (3 nets × 3 rules)
+    engine_cost       — Tables III-V op/bit model + measured SOP/s
+    roofline          — §Roofline terms from the dry-run artifacts
+
+``--only <name>`` runs a single module; ``--quick`` shrinks the
+network-accuracy protocol for CI-speed runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=("drift", "isi", "network_accuracy",
+                                       "engine_cost", "roofline"))
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    summary = {}
+    t_start = time.time()
+
+    def want(name):
+        return args.only is None or args.only == name
+
+    if want("drift"):
+        from benchmarks import drift
+        t0 = time.time()
+        r = drift.run(args.out)
+        summary["drift"] = {"seconds": round(time.time() - t0, 1),
+                            "rmse": r["metrics"]["update_curve_rmse"]}
+        print()
+    if want("isi"):
+        from benchmarks import isi
+        t0 = time.time()
+        r = isi.run(args.out)
+        summary["isi"] = {"seconds": round(time.time() - t0, 1),
+                          "coverage_at_7": r["pooled_coverage_at_7"]}
+        print()
+    if want("network_accuracy"):
+        from benchmarks import network_accuracy
+        t0 = time.time()
+        kw = {"n_train": 48, "n_test": 32, "seeds": (0,)} if args.quick else {}
+        network_accuracy.run(args.out, **kw)
+        summary["network_accuracy"] = {"seconds": round(time.time() - t0, 1)}
+        print()
+    if want("engine_cost"):
+        from benchmarks import engine_cost
+        t0 = time.time()
+        sizes = (64, 256) if args.quick else (256, 512, 1024)
+        r = engine_cost.run(args.out, sizes=sizes)
+        summary["engine_cost"] = {
+            "seconds": round(time.time() - t0, 1),
+            "speedups": [t["speedup"] for t in r["throughput"]]}
+        print()
+    if want("roofline"):
+        from benchmarks import roofline
+        t0 = time.time()
+        r = roofline.run(args.out)
+        summary["roofline"] = {"seconds": round(time.time() - t0, 1),
+                               "cells": len(r["rows"]),
+                               "missing": len(r["missing"])}
+        print()
+
+    summary["total_seconds"] = round(time.time() - t_start, 1)
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"benchmarks complete in {summary['total_seconds']}s "
+          f"→ {args.out}/")
+
+
+if __name__ == "__main__":
+    main()

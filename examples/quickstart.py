@@ -1,0 +1,50 @@
+"""Quickstart: the paper's 4×4 prototype ITP-STDP learning engine.
+
+Builds the prototype engine (§III-B, Table V row 1), drives it with a
+Poisson spike train, and demonstrates the paper's two core claims:
+
+  1. intrinsic timing — the weight update is read directly off the
+     spike-history register (no Δt computation, no exponential);
+  2. compensation — with τ' = τ·ln2 the po2 rule is numerically identical
+     to exact base-e STDP.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.drift import DriftParams, update_curve_rmse
+from repro.core.engine import EngineConfig, init_engine, run_engine
+from repro.core.history import init_history, push, registers_depth_major
+from repro.core.stdp import STDPParams, magnitudes_depth_major
+
+key = jax.random.PRNGKey(0)
+
+# --- 1. the 4×4 prototype engine -------------------------------------------
+cfg = EngineConfig(n_pre=4, n_post=4, depth=7, pairing="nearest")
+state = init_engine(key, cfg)
+print("prototype engine: 4 pre × 4 post, history depth 7, 8-bit weights")
+print("initial weights:\n", state.w)
+
+train = jax.random.bernoulli(key, 0.35, (200, 4))     # 200-step Poisson raster
+state, post_spikes = run_engine(state, train, cfg)
+print(f"\nafter 200 steps: {int(post_spikes.sum())} postsynaptic spikes")
+print("learned weights:\n", state.w)
+
+# --- 2. 'reading the register IS the update' --------------------------------
+hist = init_history(4, depth=7)
+for t, row in enumerate([[1, 0, 0, 1], [0, 0, 1, 0], [0, 1, 0, 0]]):
+    hist = push(hist, jnp.asarray(row, jnp.uint8))
+regs = registers_depth_major(hist)
+print("\nspike-history registers (k=0 row = most recent):\n", regs)
+mags = magnitudes_depth_major(regs, 1.0, 4.0, pairing="nearest")
+print("Δw magnitudes read straight off the registers:", mags)
+print("  (= A·2^(-k*/τ') where k* is each neuron's most recent spike)")
+
+# --- 3. the compensation equivalence (eq. 18) --------------------------------
+p = DriftParams()
+print("\nupdate-curve RMSE vs exact STDP:")
+print(f"  ITP w/o compensation: {update_curve_rmse(p):.6f}  "
+      f"(paper: 0.094753)")
+print(f"  ITP with τ·ln2 comp.: {update_curve_rmse(p, 'exact', 'itp'):.2e}  "
+      f"(paper: exactly 0)")

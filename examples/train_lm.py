@@ -1,0 +1,33 @@
+"""Train an assigned LM architecture (smoke config) with the full
+production loop: jitted train step, async checkpointing, failure-injected
+restart — plus the beyond-paper ITP-AdamW po2-quantised optimizer.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--arch qwen3-0.6b]
+      [--po2-update]     # the paper's quantiser applied to AdamW updates
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--po2-update", action="store_true")
+    args = ap.parse_args()
+
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", args.arch, "--smoke",
+           "--steps", str(args.steps), "--batch", "4", "--seq", "64",
+           "--ckpt-every", "20", "--ckpt-dir", "/tmp/repro_lm_ckpt",
+           "--inject-failure-at", str(args.steps // 2),
+           "--log-every", "10"]
+    if args.po2_update:
+        cmd.append("--po2-update")
+    print("launching:", " ".join(cmd))
+    raise SystemExit(subprocess.run(cmd).returncode)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver: train the paper's 2-layer SNN with ITP-STDP.
+
+A few hundred unsupervised STDP steps over rate-coded synthetic digits
+(the paper's MNIST protocol with the offline stand-in dataset), then a
+ridge readout on the frozen spike-count features — the Table II pipeline.
+
+Run:  PYTHONPATH=src python examples/train_snn.py [--rule itp|exact|itp_nocomp]
+      (--steps 300 ≈ 300 simulation steps = 10 batches × 30-step rasters)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import Prefetcher, encode_batch, spike_stream, synthetic_digits
+from repro.models import snn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rule", default="itp",
+                    choices=("exact", "itp", "itp_nocomp"))
+    ap.add_argument("--steps", type=int, default=300,
+                    help="total simulation steps of STDP training")
+    ap.add_argument("--t-raster", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--hidden", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = snn.mnist_2layer(args.rule, n_hidden=args.hidden)
+    key = jax.random.PRNGKey(0)
+    state = snn.init_snn(key, cfg, args.batch)
+    n_batches = max(args.steps // args.t_raster, 1)
+
+    print(f"training 2-layer SNN ({784}→{args.hidden}) with rule="
+          f"{args.rule!r}: {n_batches} batches × {args.t_raster} steps")
+    stream = Prefetcher(spike_stream(
+        key, lambda k, n: synthetic_digits(k, n),
+        batch=args.batch, t_steps=args.t_raster, n_steps=n_batches))
+
+    t0 = time.time()
+    for i, batch in enumerate(stream):
+        state, counts = snn.run_snn(state, batch["spikes"], cfg, train=True)
+        state = snn.reset_dynamics(state, cfg, args.batch)
+        if i % 2 == 0:
+            w = state.weights[0]
+            print(f"  batch {i:3d}: mean rate "
+                  f"{float(counts.mean()) / args.t_raster:.3f}  "
+                  f"w∈[{float(w.min()):.2f},{float(w.max()):.2f}] "
+                  f"μ={float(w.mean()):.3f}")
+    print(f"STDP training done in {time.time() - t0:.1f}s")
+
+    # frozen-feature readout (Table II protocol)
+    def features(n, seed):
+        fs, ls = [], []
+        kk = jax.random.PRNGKey(seed)
+        s = state
+        for _ in range(n // args.batch):
+            kk, kd, ke = jax.random.split(kk, 3)
+            x, y = synthetic_digits(kd, args.batch)
+            s = snn.reset_dynamics(s, cfg, args.batch)
+            s, c = snn.run_snn(s, encode_batch(ke, x, args.t_raster), cfg,
+                               train=False)
+            fs.append(c)
+            ls.append(y)
+        return jnp.concatenate(fs), jnp.concatenate(ls)
+
+    Xtr, ytr = features(96, 10)
+    Xte, yte = features(64, 20)
+    W = snn.fit_readout(Xtr, ytr, 10)
+    acc = snn.readout_accuracy(W, Xte, yte)
+    print(f"readout accuracy: {acc:.3f} (chance 0.100) — rule={args.rule!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_checkpoint,
+                                         list_checkpoints, prune_checkpoints,
+                                         restore_checkpoint, save_checkpoint)

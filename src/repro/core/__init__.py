@@ -1,0 +1,16 @@
+"""Core library: the paper's contribution as composable JAX modules."""
+from repro.core.stdp import (  # noqa: F401
+    STDPParams, exact_stdp, itp_stdp, linear_stdp, imstdp, get_rule,
+    po2_weights, nn_delta_from_history, a2a_delta_from_history,
+    pair_gate, synapse_update,
+)
+from repro.core.history import (  # noqa: F401
+    SpikeHistory, init_history, push, as_register, pack_words, unpack_words,
+)
+from repro.core.lif import (  # noqa: F401
+    LIFParams, LIFState, lif_init, lif_step, lif_step_llsmu,
+    IzhikevichParams, izhikevich_init, izhikevich_step,
+)
+from repro.core.llsmu import mitchell_fixed, mitchell_float, llsmu_fixed, llsmu_signed  # noqa: F401
+from repro.core.encoding import minmax_normalise, rate_code, isi_histogram_batched, select_history_depth  # noqa: F401
+from repro.core.engine import EngineConfig, EngineState, init_engine, engine_step, run_engine  # noqa: F401

@@ -1,0 +1,124 @@
+"""ITP-STDP learning engine (paper §III-B, §V, Figs. 4 & 9).
+
+Couples LIF neurons, bitplane spike histories, a crossbar connectivity
+table and a register weight array into a single scan-able step — the JAX
+equivalent of the prototype engine (4 presynaptic × 4 postsynaptic, fully
+connected) and its scaled-up versions.
+
+Dataflow per step (matches Fig. 9 left-to-right):
+  1. presyn spikes (external input or previous layer) gate the weight rows;
+     each postsynaptic neuron accumulates  I_j = Σ_i s_i · w_ij   (§V-B)
+  2. LIF neurons integrate I and fire
+  3. pre/post histories are read → Δw per ITP-STDP, weights updated in place
+  4. new spikes are pushed into the histories (the 'shift-in')
+
+The engine is pure function + NamedTuple state, so it jits, vmaps over
+batch, and shards over (pre, post) tiles with pjit.  The Pallas kernel in
+``repro.kernels.itp_stdp`` implements step 3's fused datapath.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import history as H
+from repro.core.lif import LIFParams, LIFState, lif_init, lif_step
+from repro.core.stdp import (STDPParams, magnitudes_depth_major, pair_gate,
+                             synapse_update)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_pre: int = 4
+    n_post: int = 4
+    depth: int = 7                       # spike-history depth (§IV-B)
+    pairing: str = "nearest"             # engine hardware uses NN (§II-B)
+    compensate: bool = True
+    eta: float = 1.0 / 16.0              # po2 learning rate (shift by 4)
+    w_min: float = 0.0
+    w_max: float = 1.0
+    w_bits: int = 8                      # weight word width incl. sign
+    quantise: bool = False               # round weights to the 8-bit grid
+    stdp: STDPParams = dataclasses.field(default_factory=STDPParams)
+    lif: LIFParams = dataclasses.field(default_factory=LIFParams)
+
+
+class EngineState(NamedTuple):
+    w: jax.Array                 # float32[n_pre, n_post]
+    pre_hist: H.SpikeHistory     # depth × n_pre
+    post_hist: H.SpikeHistory    # depth × n_post
+    neurons: LIFState            # n_post membrane
+
+
+def init_engine(key: jax.Array, cfg: EngineConfig,
+                w_init: jax.Array | None = None) -> EngineState:
+    if w_init is None:
+        w_init = jax.random.uniform(key, (cfg.n_pre, cfg.n_post),
+                                    minval=0.2, maxval=0.8)
+    return EngineState(
+        w=jnp.asarray(w_init, jnp.float32),
+        pre_hist=H.init_history(cfg.n_pre, cfg.depth),
+        post_hist=H.init_history(cfg.n_post, cfg.depth),
+        neurons=lif_init((cfg.n_post,), cfg.lif),
+    )
+
+
+def _quantise(w: jax.Array, cfg: EngineConfig) -> jax.Array:
+    """Snap to the (w_bits-1)-bit magnitude grid on [w_min, w_max]."""
+    levels = (1 << (cfg.w_bits - 1)) - 1
+    scale = (cfg.w_max - cfg.w_min) / levels
+    return cfg.w_min + jnp.round((w - cfg.w_min) / scale) * scale
+
+
+def engine_step(state: EngineState, pre_spikes: jax.Array,
+                cfg: EngineConfig) -> tuple[EngineState, jax.Array]:
+    """One full engine cycle; returns (state', post_spikes)."""
+    pre_spikes = jnp.asarray(pre_spikes)
+
+    # 1. synaptic accumulation, gated by presynaptic activity (§V-B)
+    i_in = pre_spikes.astype(jnp.float32) @ state.w          # (n_post,)
+
+    # 2. LIF integrate-and-fire
+    neurons, post_spikes = lif_step(state.neurons, i_in, cfg.lif)
+
+    # 3. ITP-STDP weight update from the *stored* histories (past spikes).
+    #    Depth-major fast path: per-neuron magnitudes are a (depth,)·
+    #    (depth, N) read with no relayout; the synapse matrix sees only a
+    #    rank-1 gated outer product — O(N) readout + O(N²) add/mul, no
+    #    per-pair transcendental (the intrinsic-timing claim, §III).
+    ltp_mag = magnitudes_depth_major(
+        H.registers_depth_major(state.pre_hist), cfg.stdp.a_plus,
+        cfg.stdp.tau_plus, pairing=cfg.pairing, compensate=cfg.compensate)
+    ltd_mag = magnitudes_depth_major(
+        H.registers_depth_major(state.post_hist), cfg.stdp.a_minus,
+        cfg.stdp.tau_minus, pairing=cfg.pairing, compensate=cfg.compensate)
+    ltp_en, ltd_en = pair_gate(pre_spikes[:, None], post_spikes[None, :])
+    dw = ltp_en * ltp_mag[:, None] - ltd_en * ltd_mag[None, :]
+    w = jnp.clip(state.w + cfg.eta * dw, cfg.w_min, cfg.w_max)
+    if cfg.quantise:
+        w = _quantise(w, cfg)
+
+    # 4. shift-in the new spikes
+    pre_hist = H.push(state.pre_hist, pre_spikes)
+    post_hist = H.push(state.post_hist, post_spikes)
+    return EngineState(w, pre_hist, post_hist, neurons), post_spikes
+
+
+def run_engine(state: EngineState, spike_train: jax.Array,
+               cfg: EngineConfig) -> tuple[EngineState, jax.Array]:
+    """Scan the engine over a (T, n_pre) input raster; returns post raster."""
+    def step(s, x):
+        s, out = engine_step(s, x, cfg)
+        return s, out
+
+    state, post = jax.lax.scan(step, state, spike_train)
+    return state, post
+
+
+def prototype_engine(key: jax.Array) -> tuple[EngineConfig, EngineState]:
+    """The paper's 4×4 fully connected prototype (§III-B / Table V row 1)."""
+    cfg = EngineConfig(n_pre=4, n_post=4)
+    return cfg, init_engine(key, cfg)

@@ -1,0 +1,104 @@
+"""Distributed ITP-STDP learning engine (DESIGN.md §4.1).
+
+Scales the learning engine from the paper's 4×4 prototype to layer-sized
+synapse matrices across a device mesh: the weight matrix shards 2-D over
+(data, model) ≙ (pre-tiles, post-tiles); each device updates its (pre ×
+post) tile from *replicated* spike histories — the update is
+embarrassingly parallel because the per-neuron Δw magnitudes are rank-1
+(the intrinsic-timing property: no per-synapse state crosses devices).
+
+Per step, the only communication is the postsynaptic current reduction
+I_j = Σ_i s_i·w_ij — a psum over the pre-sharded axis (operand = n_post
+floats), after which spikes are computed redundantly on every device of a
+post-column.  Histories are O(depth · N) bits and stay replicated.
+
+``shard_map``-manual over both axes so the collective schedule is exactly
+the one the hardware analogue implies: one reduction per step, nothing
+else.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import history as H
+from repro.core.engine import EngineConfig, EngineState, init_engine
+from repro.core.lif import LIFState, lif_step
+from repro.core.stdp import magnitudes_depth_major, pair_gate
+
+
+def shard_engine_state(state: EngineState, mesh: Mesh,
+                       axes: tuple[str, str] = ("data", "model")
+                       ) -> EngineState:
+    """Place weights 2-D sharded, histories/neurons replicated."""
+    w_sh = NamedSharding(mesh, P(*axes))
+    rep = NamedSharding(mesh, P())
+    return EngineState(
+        w=jax.device_put(state.w, w_sh),
+        pre_hist=jax.tree_util.tree_map(
+            lambda a: jax.device_put(a, rep), state.pre_hist),
+        post_hist=jax.tree_util.tree_map(
+            lambda a: jax.device_put(a, rep), state.post_hist),
+        neurons=jax.tree_util.tree_map(
+            lambda a: jax.device_put(a, rep), state.neurons),
+    )
+
+
+def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
+                             axes: tuple[str, str] = ("data", "model")):
+    """Jitted one-step update with the weight matrix sharded over ``axes``.
+
+    Returns ``step(state, pre_spikes) → (state', post_spikes)``; both
+    histories and neuron state replicate, ``state.w`` shards (pre, post).
+    """
+    pre_ax, post_ax = axes
+
+    def local_step(w, pre_spikes, pre_reg, post_reg, v):
+        # w: local (pre_tile, post_tile); spikes/histories: global shards
+        # along their own axes (pre over pre_ax, post over post_ax)
+        i_local = pre_spikes.astype(jnp.float32) @ w       # (post_tile,)
+        i_in = jax.lax.psum(i_local, pre_ax)               # the ONE collective
+        neurons, post_spikes = lif_step(LIFState(v=v), i_in, cfg.lif)
+        ltp = magnitudes_depth_major(pre_reg, cfg.stdp.a_plus,
+                                     cfg.stdp.tau_plus, pairing=cfg.pairing,
+                                     compensate=cfg.compensate)
+        ltd = magnitudes_depth_major(post_reg, cfg.stdp.a_minus,
+                                     cfg.stdp.tau_minus, pairing=cfg.pairing,
+                                     compensate=cfg.compensate)
+        ltp_en, ltd_en = pair_gate(pre_spikes[:, None], post_spikes[None, :])
+        dw = ltp_en * ltp[:, None] - ltd_en * ltd[None, :]
+        w = jnp.clip(w + cfg.eta * dw, cfg.w_min, cfg.w_max)
+        return w, post_spikes, neurons.v
+
+    sharded = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(P(pre_ax, post_ax),      # w tile
+                  P(pre_ax),               # pre spikes (sharded like rows)
+                  P(None, pre_ax),         # pre registers (depth, n_pre)
+                  P(None, post_ax),        # post registers
+                  P(post_ax)),             # membrane (sharded like cols)
+        out_specs=(P(pre_ax, post_ax), P(post_ax), P(post_ax)),
+        check_vma=False)
+
+    @jax.jit
+    def step(state: EngineState, pre_spikes: jax.Array):
+        pre_reg = H.registers_depth_major(state.pre_hist)
+        post_reg = H.registers_depth_major(state.post_hist)
+        w, post_spikes, v = sharded(state.w,
+                                    pre_spikes.astype(jnp.float32),
+                                    pre_reg.astype(jnp.float32),
+                                    post_reg.astype(jnp.float32),
+                                    state.neurons.v)
+        post_bool = post_spikes.astype(jnp.bool_)
+        new_state = EngineState(
+            w=w,
+            pre_hist=H.push(state.pre_hist, pre_spikes),
+            post_hist=H.push(state.post_hist, post_bool),
+            neurons=type(state.neurons)(v=v),
+        )
+        return new_state, post_bool
+
+    return step

@@ -1,0 +1,112 @@
+"""Bitplane spike-history storage — the TPU adaptation of the paper's
+shift-register array.
+
+On the FPGA/ASIC the spike history of neuron *i* is a ``depth``-bit shift
+register; every step shifts in the new spike bit.  On TPU, shifting data is
+wasted bandwidth, so we keep a **ring buffer of bitplanes**:
+
+    ``planes`` : uint8[depth, N]   planes[s, i] = spike of neuron i at slot s
+    ``head``   : int32             slot holding the *most recent* step
+
+"Shift" = overwrite slot ``(head+1) % depth`` and bump ``head`` — O(N) write,
+no movement of the other ``depth-1`` planes.  Reading the logical register
+(k=0 most-recent … k=depth-1 oldest) is a gather along the slot axis with
+index ``(head - k) % depth``; the paper's fixed-point read (eq. 2 / Fig. 3)
+becomes a dot of that gathered view with the constant po2 vector, and the
+MSB-priority-encode (Fig. 11) an argmax over k.
+
+A packed representation (``uint8`` word per neuron, depth ≤ 8) is also
+provided: it is bit-exact with the register picture in the paper and is the
+storage format used by the Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SpikeHistory(NamedTuple):
+    """Ring-buffer bitplane history for N neurons."""
+
+    planes: jax.Array  # uint8[depth, N]
+    head: jax.Array    # int32 scalar, slot index of most recent step
+
+    @property
+    def depth(self) -> int:
+        return self.planes.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.planes.shape[1]
+
+
+def init_history(n: int, depth: int = 7, dtype=jnp.uint8) -> SpikeHistory:
+    return SpikeHistory(planes=jnp.zeros((depth, n), dtype),
+                        head=jnp.asarray(depth - 1, jnp.int32))
+
+
+def push(h: SpikeHistory, spikes: jax.Array) -> SpikeHistory:
+    """Record the current step's spikes (the hardware 'shift-in')."""
+    new_head = (h.head + 1) % h.depth
+    planes = jax.lax.dynamic_update_index_in_dim(
+        h.planes, spikes.astype(h.planes.dtype)[None, :], new_head, axis=0
+    )
+    return SpikeHistory(planes=planes, head=new_head.astype(jnp.int32))
+
+
+def as_register(h: SpikeHistory) -> jax.Array:
+    """Materialise the logical registers: (N, depth), k=0 most recent.
+
+    Equivalent to the shift-register contents in paper Figs. 2/3.
+    """
+    k = jnp.arange(h.depth)
+    slots = (h.head - k) % h.depth          # (depth,)
+    return h.planes[slots, :].T              # (N, depth)
+
+
+def registers_depth_major(h: SpikeHistory) -> jax.Array:
+    """(depth, N) logical registers, k=0 row = most recent — no transpose.
+
+    ``roll`` of the reversed planes instead of a gather+transpose: XLA
+    lowers it to two static slices, keeping the hot engine path free of
+    the (N, depth) relayout that dominated the first profile (§Perf log).
+    out[k] = planes[(head - k) % depth].
+    """
+    rev = h.planes[::-1]                     # rev[j] = planes[depth-1-j]
+    return jnp.roll(rev, h.head + 1, axis=0)
+
+
+def pack_words(h: SpikeHistory) -> jax.Array:
+    """Pack each neuron's register into a uint8 word, MSB = most recent.
+
+    This is byte-for-byte the register file of the hardware design (depth≤8;
+    one spare low bit when depth==7, matching the paper's 8-bit datapath
+    with a sign bit reserved in the weight word, not here).
+    """
+    if h.depth > 8:
+        raise ValueError("pack_words supports depth <= 8")
+    reg = as_register(h)                     # (N, depth) {0,1}
+    shifts = jnp.arange(7, 7 - h.depth, -1)  # MSB-first placement
+    return jnp.sum(reg.astype(jnp.uint8) << shifts.astype(jnp.uint8), axis=-1,
+                   dtype=jnp.uint8)
+
+
+def unpack_words(words: jax.Array, depth: int) -> jax.Array:
+    """Inverse of :func:`pack_words` → (N, depth) bitplanes, k=0 most recent."""
+    if depth > 8:
+        raise ValueError("unpack_words supports depth <= 8")
+    shifts = jnp.arange(7, 7 - depth, -1, dtype=jnp.uint8)
+    return ((words[..., None] >> shifts) & jnp.uint8(1)).astype(jnp.uint8)
+
+
+def fixed_point_value(words: jax.Array, depth: int) -> jax.Array:
+    """Read a packed history word as the paper's binary fraction.
+
+    With one integer bit (the MSB, weight 2^0) the word value is
+    Σ_k h[k]·2^(-k) — exactly the all-to-all accumulation of eq. (2) for the
+    uncompensated po2 kernel with τ=1/ln2· … i.e. the raw place-value read.
+    """
+    del depth  # the place-value read is depth-independent once packed
+    return words.astype(jnp.float32) / 128.0  # MSB has place value 2^0 = 128/128

@@ -1,0 +1,118 @@
+"""Neuron models: LIF (paper eqs. 4-5) and Izhikevich (§IV-C DCSNN).
+
+The LIF neuron has two datapaths, mirroring the hardware design (§V-B):
+
+* ``lif_step``        — exact float path:  V' = α·(V−E) + E + I,  α = e^(−1/τ)
+* ``lif_step_llsmu``  — fixed-point path where the α·(V−E) multiply goes
+  through the LLSMu approximate multiplier, as in the paper's learning
+  engine (Fig. 9).  V is kept in Q(``frac_bits``) integers.
+
+Both return ``(state, spikes)`` and are scan-friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.llsmu import llsmu_signed
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFParams:
+    tau: float = 2.0          # membrane time constant (steps)
+    v_th: float = 1.0         # firing threshold
+    e_rest: float = 0.0       # resting potential
+
+    @property
+    def alpha(self) -> float:
+        return math.exp(-1.0 / self.tau)
+
+
+class LIFState(NamedTuple):
+    v: jax.Array
+
+
+def lif_init(shape, p: LIFParams) -> LIFState:
+    return LIFState(v=jnp.full(shape, p.e_rest, jnp.float32))
+
+
+def lif_step(state: LIFState, i_in: jax.Array, p: LIFParams) -> tuple[LIFState, jax.Array]:
+    """Exact LIF update (eq. 4) + threshold/reset (eq. 5)."""
+    v = p.alpha * (state.v - p.e_rest) + p.e_rest + i_in
+    spikes = (v > p.v_th)
+    v = jnp.where(spikes, p.e_rest, v)
+    return LIFState(v=v), spikes
+
+
+class LIFFixedState(NamedTuple):
+    v_q: jax.Array  # int32, Q(frac_bits)
+
+
+def lif_fixed_init(shape, p: LIFParams, frac_bits: int = 8) -> LIFFixedState:
+    e_q = int(round(p.e_rest * (1 << frac_bits)))
+    return LIFFixedState(v_q=jnp.full(shape, e_q, jnp.int32))
+
+
+def lif_step_llsmu(state: LIFFixedState, i_in: jax.Array, p: LIFParams,
+                   *, frac_bits: int = 8) -> tuple[LIFFixedState, jax.Array]:
+    """Hardware-faithful LIF step: the leak multiply uses LLSMu (Fig. 9).
+
+    V is Q(frac_bits) int32; α is quantised to the same format; the product
+    α·(V−E) is a Q×Q→Q2 LLSMu multiply followed by a truncating shift, which
+    is exactly the fixed-point datapath of the learning engine.
+    ``i_in`` is float current, quantised on entry.
+    """
+    one = 1 << frac_bits
+    alpha_q = jnp.int32(round(p.alpha * one))
+    e_q = jnp.int32(round(p.e_rest * one))
+    vth_q = jnp.int32(round(p.v_th * one))
+    i_q = jnp.round(jnp.asarray(i_in, jnp.float32) * one).astype(jnp.int32)
+
+    leak = llsmu_signed(state.v_q - e_q, alpha_q) >> frac_bits
+    v_q = leak + e_q + i_q
+    spikes = v_q > vth_q
+    v_q = jnp.where(spikes, e_q, v_q)
+    return LIFFixedState(v_q=v_q), spikes
+
+
+# ---------------------------------------------------------------------------
+# Izhikevich neuron (used by the 6-layer DCSNN in §IV-C)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IzhikevichParams:
+    a: float = 0.02
+    b: float = 0.2
+    c: float = -65.0
+    d: float = 8.0
+    v_th: float = 30.0
+    dt: float = 1.0
+
+
+class IzhikevichState(NamedTuple):
+    v: jax.Array
+    u: jax.Array
+
+
+def izhikevich_init(shape, p: IzhikevichParams) -> IzhikevichState:
+    v = jnp.full(shape, p.c, jnp.float32)
+    return IzhikevichState(v=v, u=p.b * v)
+
+
+def izhikevich_step(state: IzhikevichState, i_in: jax.Array,
+                    p: IzhikevichParams) -> tuple[IzhikevichState, jax.Array]:
+    v, u = state.v, state.u
+    dv = 0.04 * v * v + 5.0 * v + 140.0 - u + i_in
+    du = p.a * (p.b * v - u)
+    v = v + p.dt * dv
+    u = u + p.dt * du
+    spikes = v >= p.v_th
+    v = jnp.where(spikes, p.c, v)
+    u = jnp.where(spikes, u + p.d, u)
+    # clamp against Euler blow-up at large dt (standard practice)
+    v = jnp.clip(v, -120.0, p.v_th)
+    return IzhikevichState(v=v, u=u), spikes

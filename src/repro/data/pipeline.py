@@ -1,0 +1,93 @@
+"""Spike-encoding data pipeline (paper §IV-B front half).
+
+Chains the synthetic generators with min-max normalisation (eq. 28) and
+Bernoulli rate coding (eq. 29) into (T, B, N) spike rasters ready for the
+SNN training loop, plus a double-buffered prefetcher so host-side encoding
+overlaps device compute.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import minmax_normalise, rate_code
+
+
+def encode_batch(key: jax.Array, x: jax.Array, t_steps: int) -> jax.Array:
+    """(B, ...) floats → (T, B, features) {0,1} spikes.
+
+    Per-sample min-max normalisation (eq. 28) then Bernoulli rate coding
+    (eq. 29); feature dims are flattened.
+    """
+    B = x.shape[0]
+    flat = x.reshape(B, -1)
+    norm = minmax_normalise(flat, axis=-1)
+    return rate_code(key, norm, t_steps)               # (T, B, N)
+
+
+def spike_stream(key: jax.Array,
+                 sampler: Callable[[jax.Array, int], tuple[jax.Array, jax.Array]],
+                 *, batch: int, t_steps: int,
+                 n_steps: int | None = None) -> Iterator[dict]:
+    """Stream of {spikes (T,B,N), labels (B,)} batches from a sampler."""
+    step = 0
+    while n_steps is None or step < n_steps:
+        key, k_data, k_enc = jax.random.split(key, 3)
+        x, labels = sampler(k_data, batch)
+        yield {"spikes": encode_batch(k_enc, x, t_steps), "labels": labels}
+        step += 1
+
+
+class Prefetcher:
+    """Double-buffered background prefetch of an iterator (host → device).
+
+    The training loop's `next()` overlaps the *next* batch's generation +
+    encoding with the current step's device compute — the standard input-
+    pipeline trick, testable on CPU.
+    """
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._it = it
+        self._q: collections.deque = collections.deque()
+        self._depth = depth
+        self._lock = threading.Lock()
+        self._done = False
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._event = threading.Event()
+        self._space = threading.Event()
+        self._space.set()
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                while True:
+                    with self._lock:
+                        if len(self._q) < self._depth:
+                            self._q.append(jax.device_put(item))
+                            self._event.set()
+                            break
+                    self._space.clear()
+                    self._space.wait(timeout=0.1)
+        finally:
+            self._done = True
+            self._event.set()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        while True:
+            with self._lock:
+                if self._q:
+                    item = self._q.popleft()
+                    self._space.set()
+                    return item
+                if self._done:
+                    raise StopIteration
+            self._event.clear()
+            self._event.wait(timeout=0.1)

@@ -1,0 +1,130 @@
+"""Fused ITP-STDP synapse-update Pallas kernel.
+
+TPU adaptation of the paper's learning-engine datapath (Figs. 9-11):
+
+  FPGA: shift-register read → priority encode → 2's-complement → adder
+  TPU : bitplane dot with the po2 place-value vector (VPU/MXU) → outer
+        LTP/LTD gating (the XOR/AND control logic) → fused w += Δw, clip
+
+Layout choices (HW-codesign reasoning):
+  * spike histories are stored **depth-major** ``(depth, N)`` so the neuron
+    axis sits on the 128-wide lane dimension and the (≤8)-deep history on
+    the sublane dimension — the po2 read is an 8-element reduction per lane,
+    which the Mosaic compiler keeps entirely in VREGs;
+  * the weight tile ``(TP, TQ)`` lives in VMEM for the whole fused
+    read-modify-write — one HBM round-trip per tile instead of the three
+    (read Δw operands, read w, write w) a composed implementation costs;
+  * LTP/LTD magnitudes are rank-1 per tile row/col, so Δw is an outer
+    product accumulate — MXU-aligned when TP, TQ are multiples of 8/128.
+
+The kernel covers both pairing modes of §II-B with one code path: the
+nearest-neighbour MSB mask (Fig. 11) is ``bits & (cumsum(bits) == 1)``,
+the all-to-all fixed-point read (Fig. 3) uses the raw bits; both then dot
+with the po2 vector, which carries the place values 2^(-k/τ') (place value
+2^-k exactly in the hardware regime τ' = 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stdp_kernel(pre_spike_ref, post_spike_ref, pre_hist_ref, post_hist_ref,
+                 po2_ltp_ref, po2_ltd_ref, w_ref, out_ref, *,
+                 nearest: bool, eta: float, w_min: float, w_max: float):
+    # (depth, TP) / (depth, TQ) bitplanes, {0,1}
+    pre_bits = pre_hist_ref[...].astype(jnp.float32)
+    post_bits = post_hist_ref[...].astype(jnp.float32)
+
+    if nearest:
+        # Fig. 11 MSB mask: keep only the first '1' scanning most-recent-first
+        pre_bits = pre_bits * (jnp.cumsum(pre_bits, axis=0) == 1.0)
+        post_bits = post_bits * (jnp.cumsum(post_bits, axis=0) == 1.0)
+
+    # po2 read: (1, depth) @ (depth, T) -> (1, T); the 'register read IS the
+    # weight update' step.  po2 vectors include the A± amplitudes.
+    ltp_mag = po2_ltp_ref[...] @ pre_bits        # (1, TP)
+    ltd_mag = po2_ltd_ref[...] @ post_bits       # (1, TQ)
+
+    # XOR/AND control logic (§V-A): update only when exactly one side fired
+    pre_s = pre_spike_ref[...].astype(jnp.float32)     # (1, TP)
+    post_s = post_spike_ref[...].astype(jnp.float32)   # (1, TQ)
+    fire_xor = pre_s[0, :, None] + post_s[0, None, :] \
+             - 2.0 * pre_s[0, :, None] * post_s[0, None, :]   # XOR on {0,1}
+    ltp_en = fire_xor * post_s[0, None, :]       # post fired alone
+    ltd_en = fire_xor * pre_s[0, :, None]        # pre fired alone
+
+    dw = ltp_en * ltp_mag[0, :, None] - ltd_en * ltd_mag[0, None, :]
+    out_ref[...] = jnp.clip(w_ref[...] + eta * dw, w_min, w_max)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nearest", "eta", "w_min", "w_max", "tile_pre",
+                     "tile_post", "interpret"),
+)
+def itp_stdp_update(w: jax.Array,
+                    pre_spike: jax.Array, post_spike: jax.Array,
+                    pre_hist: jax.Array, post_hist: jax.Array,
+                    po2_ltp: jax.Array, po2_ltd: jax.Array,
+                    *,
+                    nearest: bool = True,
+                    eta: float = 1.0,
+                    w_min: float = 0.0,
+                    w_max: float = 1.0,
+                    tile_pre: int = 256,
+                    tile_post: int = 256,
+                    interpret: bool = True) -> jax.Array:
+    """Fused ITP-STDP weight update.
+
+    Args:
+      w:          (n_pre, n_post) float32 synapse matrix.
+      pre_spike:  (n_pre,)  current-step spikes {0,1}.
+      post_spike: (n_post,) current-step spikes {0,1}.
+      pre_hist:   (depth, n_pre)  bitplanes, k=0 row = most recent.
+      post_hist:  (depth, n_post) bitplanes.
+      po2_ltp:    (depth,) LTP read vector  A+·2^(-k/τ').
+      po2_ltd:    (depth,) LTD read vector  A-·2^(-k/τ').
+      nearest:    nearest-neighbour (True) or all-to-all (False) pairing.
+      interpret:  run the kernel body in interpret mode (CPU validation);
+                  False targets real TPU hardware.
+
+    Returns the updated, clipped weight matrix.
+    """
+    n_pre, n_post = w.shape
+    depth = pre_hist.shape[0]
+    tp = min(tile_pre, n_pre)
+    tq = min(tile_post, n_post)
+    if n_pre % tp or n_post % tq:
+        raise ValueError(f"tile sizes ({tp},{tq}) must divide ({n_pre},{n_post})")
+
+    grid = (n_pre // tp, n_post // tq)
+    kern = functools.partial(_stdp_kernel, nearest=nearest, eta=eta,
+                             w_min=w_min, w_max=w_max)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tp), lambda i, j: (0, i)),        # pre_spike
+            pl.BlockSpec((1, tq), lambda i, j: (0, j)),        # post_spike
+            pl.BlockSpec((depth, tp), lambda i, j: (0, i)),    # pre_hist
+            pl.BlockSpec((depth, tq), lambda i, j: (0, j)),    # post_hist
+            pl.BlockSpec((1, depth), lambda i, j: (0, 0)),     # po2_ltp
+            pl.BlockSpec((1, depth), lambda i, j: (0, 0)),     # po2_ltd
+            pl.BlockSpec((tp, tq), lambda i, j: (i, j)),       # w
+        ],
+        out_specs=pl.BlockSpec((tp, tq), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pre, n_post), jnp.float32),
+        interpret=interpret,
+    )(
+        pre_spike.reshape(1, n_pre).astype(jnp.float32),
+        post_spike.reshape(1, n_post).astype(jnp.float32),
+        pre_hist.astype(jnp.float32),
+        post_hist.astype(jnp.float32),
+        po2_ltp.reshape(1, depth).astype(jnp.float32),
+        po2_ltd.reshape(1, depth).astype(jnp.float32),
+        w.astype(jnp.float32),
+    )

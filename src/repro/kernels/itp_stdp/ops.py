@@ -1,0 +1,81 @@
+"""Public jit'd wrapper for the fused ITP-STDP kernel.
+
+Bridges ``repro.core`` state (SpikeHistory ring buffers, STDPParams) to the
+raw Pallas kernel, padding neuron counts to lane multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.history import SpikeHistory, as_register
+from repro.core.stdp import STDPParams, po2_weights
+from repro.kernels.itp_stdp.kernel import itp_stdp_update
+from repro.kernels.itp_stdp.ref import itp_stdp_update_ref
+
+LANE = 128
+
+
+def _pad_to(x: jax.Array, n: int, axis: int) -> jax.Array:
+    pad = n - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def engine_weight_update(w: jax.Array,
+                         pre_spike: jax.Array, post_spike: jax.Array,
+                         pre_hist: SpikeHistory, post_hist: SpikeHistory,
+                         params: STDPParams,
+                         *,
+                         pairing: str = "nearest",
+                         compensate: bool = True,
+                         eta: float = 1.0,
+                         w_min: float = 0.0,
+                         w_max: float = 1.0,
+                         use_kernel: bool = True,
+                         interpret: bool = True) -> jax.Array:
+    """ITP-STDP update of the full synapse matrix via the Pallas kernel.
+
+    Drop-in accelerated replacement for ``repro.core.stdp.synapse_update``
+    (same semantics, validated by tests/test_kernels.py).
+    """
+    n_pre, n_post = w.shape
+    depth = pre_hist.depth
+    po2_ltp = params.a_plus * po2_weights(depth, params.tau_plus,
+                                          compensate=compensate)
+    po2_ltd = params.a_minus * po2_weights(depth, params.tau_minus,
+                                           compensate=compensate)
+    # core stores registers (N, depth); kernel wants depth-major (depth, N)
+    pre_bits = as_register(pre_hist).T
+    post_bits = as_register(post_hist).T
+
+    nearest = pairing == "nearest"
+    if not use_kernel:
+        return itp_stdp_update_ref(w, pre_spike, post_spike, pre_bits,
+                                   post_bits, po2_ltp, po2_ltd,
+                                   nearest=nearest, eta=eta,
+                                   w_min=w_min, w_max=w_max)
+
+    p_pre = _round_up(n_pre, LANE)
+    p_post = _round_up(n_post, LANE)
+    out = itp_stdp_update(
+        _pad_to(_pad_to(w, p_pre, 0), p_post, 1),
+        _pad_to(pre_spike.astype(jnp.float32), p_pre, 0),
+        _pad_to(post_spike.astype(jnp.float32), p_post, 0),
+        _pad_to(pre_bits, p_pre, 1),
+        _pad_to(post_bits, p_post, 1),
+        po2_ltp, po2_ltd,
+        nearest=nearest, eta=eta, w_min=w_min, w_max=w_max,
+        tile_pre=min(256, p_pre), tile_post=min(256, p_post),
+        interpret=interpret,
+    )
+    return out[:n_pre, :n_post]

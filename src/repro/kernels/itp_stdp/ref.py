@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the ITP-STDP kernel (mirrors repro.core.stdp)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def itp_stdp_update_ref(w: jax.Array,
+                        pre_spike: jax.Array, post_spike: jax.Array,
+                        pre_hist: jax.Array, post_hist: jax.Array,
+                        po2_ltp: jax.Array, po2_ltd: jax.Array,
+                        *,
+                        nearest: bool = True,
+                        eta: float = 1.0,
+                        w_min: float = 0.0,
+                        w_max: float = 1.0) -> jax.Array:
+    """Reference semantics of the fused kernel, shapes as in kernel.py."""
+    pre_bits = pre_hist.astype(jnp.float32)     # (depth, n_pre)
+    post_bits = post_hist.astype(jnp.float32)   # (depth, n_post)
+    if nearest:
+        pre_bits = pre_bits * (jnp.cumsum(pre_bits, axis=0) == 1.0)
+        post_bits = post_bits * (jnp.cumsum(post_bits, axis=0) == 1.0)
+
+    ltp_mag = po2_ltp.astype(jnp.float32) @ pre_bits    # (n_pre,)
+    ltd_mag = po2_ltd.astype(jnp.float32) @ post_bits   # (n_post,)
+
+    pre_s = pre_spike.astype(jnp.bool_)
+    post_s = post_spike.astype(jnp.bool_)
+    fire_xor = jnp.logical_xor(pre_s[:, None], post_s[None, :])
+    ltp_en = jnp.logical_and(fire_xor, post_s[None, :]).astype(jnp.float32)
+    ltd_en = jnp.logical_and(fire_xor, pre_s[:, None]).astype(jnp.float32)
+
+    dw = ltp_en * ltp_mag[:, None] - ltd_en * ltd_mag[None, :]
+    return jnp.clip(w.astype(jnp.float32) + eta * dw, w_min, w_max)

@@ -1,0 +1,46 @@
+"""Jit'd wrapper for the fused LIF kernel with core-API adapters."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFParams, LIFState
+from repro.kernels.lif.kernel import lif_update
+from repro.kernels.lif.ref import lif_update_ref
+
+LANE = 128
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def lif_step_kernel(state: LIFState, i_in: jax.Array, p: LIFParams,
+                    *, use_kernel: bool = True,
+                    interpret: bool = True) -> tuple[LIFState, jax.Array]:
+    """Kernel-backed drop-in for ``repro.core.lif.lif_step``.
+
+    Accepts 1-D (n,) or 2-D (batch, n) membrane state; pads the neuron axis
+    to a lane multiple for the TPU layout.
+    """
+    v = state.v
+    squeeze = v.ndim == 1
+    if squeeze:
+        v = v[None, :]
+        i_in = i_in[None, :]
+    if not use_kernel:
+        v2, s = lif_update_ref(v, i_in, alpha=p.alpha, e_rest=p.e_rest,
+                               v_th=p.v_th)
+    else:
+        b, n = v.shape
+        np_ = _round_up(n, LANE)
+        bp_ = _round_up(b, 8) if b > 1 else 1
+        vp = jnp.pad(v, ((0, bp_ - b), (0, np_ - n)))
+        ip = jnp.pad(i_in, ((0, bp_ - b), (0, np_ - n)))
+        v2, s = lif_update(vp, ip, alpha=p.alpha, e_rest=p.e_rest,
+                           v_th=p.v_th, tile_b=min(8, bp_),
+                           tile_n=min(512, np_), interpret=interpret)
+        v2, s = v2[:b, :n], s[:b, :n]
+    if squeeze:
+        v2, s = v2[0], s[0]
+    return LIFState(v=v2), s.astype(jnp.bool_)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused LIF kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lif_update_ref(v: jax.Array, i_in: jax.Array, *,
+                   alpha: float, e_rest: float = 0.0,
+                   v_th: float = 1.0) -> tuple[jax.Array, jax.Array]:
+    v = v.astype(jnp.float32)
+    v_new = alpha * (v - e_rest) + e_rest + i_in.astype(jnp.float32)
+    spikes = v_new > v_th
+    return jnp.where(spikes, e_rest, v_new), spikes.astype(jnp.float32)

@@ -1,0 +1,93 @@
+"""LLSMu approximate-multiplier Pallas kernel (paper §II-D, eqs. 6-14).
+
+Elementwise integer kernel: Karatsuba split + three Mitchell log-multiplies
++ exact recombination, on int32 tiles.  Every operation is a VPU-native
+shift/compare/add — the TPU rendering of the multiplier-free datapath the
+paper builds in LUTs.  The leading-one detector (the FPGA priority encoder
+of Fig. 9's preprocessing module) becomes a threshold-compare reduction,
+unrolled over the operand width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _floor_log2(x: jax.Array, max_bits: int) -> jax.Array:
+    """k = ⌊log2 x⌋ via an unrolled threshold-compare chain (exact)."""
+    k = jnp.zeros_like(x)
+    for i in range(1, max_bits):
+        k = k + (x >= (1 << i)).astype(jnp.int32)
+    return k
+
+
+def _var_shift(mant: jax.Array, s: jax.Array) -> jax.Array:
+    left = jnp.maximum(s, 0)
+    right = jnp.maximum(-s, 0)
+    return (mant << left) >> right
+
+
+def _mitchell(x: jax.Array, y: jax.Array, *, frac_bits: int, cq: int,
+              max_bits: int) -> jax.Array:
+    one = 1 << frac_bits
+    kx = _floor_log2(x, max_bits)
+    ky = _floor_log2(y, max_bits)
+    fx = _var_shift(x, frac_bits - kx)
+    fy = _var_shift(y, frac_bits - ky)
+    delta = fx + fy - 2 * one
+    mant = jnp.where(delta < one, one + delta + cq, 2 * (delta + cq // 2))
+    p = _var_shift(mant, kx + ky - frac_bits)
+    return jnp.where((x == 0) | (y == 0), 0, p)
+
+
+def _llsmu_kernel(a_ref, b_ref, o_ref, *, n_bits: int, frac_bits: int,
+                  cq: int, max_bits: int):
+    a = a_ref[...]
+    b = b_ref[...]
+    mask = (1 << n_bits) - 1
+    ha, la = a >> n_bits, a & mask
+    hb, lb = b >> n_bits, b & mask
+    m = functools.partial(_mitchell, frac_bits=frac_bits, cq=cq,
+                          max_bits=max_bits)
+    m0 = m(la, lb)
+    m1 = m(ha, hb)
+    m2 = m(ha + la, hb + lb)
+    s3 = m2 - m0 - m1
+    o_ref[...] = (m1 << (2 * n_bits)) + (s3 << n_bits) + m0
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "frac_bits", "c", "tile", "interpret"),
+)
+def llsmu_multiply(a: jax.Array, b: jax.Array, *,
+                   n_bits: int = 4, frac_bits: int = 12,
+                   c: float = 0.08333, tile: int = 512,
+                   interpret: bool = True) -> jax.Array:
+    """Elementwise LLSMu approximate multiply of flat int32 arrays.
+
+    Operands must be non-negative; callers handle sign (sign-magnitude, as
+    in the hardware).  Shapes: both (n,) → (n,).
+    """
+    (n,) = a.shape
+    t = min(tile, n)
+    if n % t:
+        raise ValueError(f"tile {t} must divide length {n}")
+    cq = int(round(c * (1 << frac_bits)))
+    max_bits = 2 * n_bits + 2  # operands ≤ 2N+1 bits after the Karatsuba add
+    kern = functools.partial(_llsmu_kernel, n_bits=n_bits,
+                             frac_bits=frac_bits, cq=cq, max_bits=max_bits + 8)
+    return pl.pallas_call(
+        kern,
+        grid=(n // t,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (0, i)),
+            pl.BlockSpec((1, t), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, t), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.int32),
+        interpret=interpret,
+    )(a.reshape(1, n).astype(jnp.int32), b.reshape(1, n).astype(jnp.int32))[0]

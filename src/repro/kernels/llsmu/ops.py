@@ -1,0 +1,36 @@
+"""Jit'd wrapper for the LLSMu kernel: arbitrary shapes, signed operands."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.llsmu.kernel import llsmu_multiply
+from repro.kernels.llsmu.ref import llsmu_multiply_ref
+
+LANE = 128
+
+
+def llsmu(a: jax.Array, b: jax.Array, *, n_bits: int = 4,
+          frac_bits: int = 12, c: float = 0.08333,
+          use_kernel: bool = True, interpret: bool = True) -> jax.Array:
+    """Signed LLSMu approximate multiply, any (broadcastable-equal) shape."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    if a.shape != b.shape:
+        a, b = jnp.broadcast_arrays(a, b)
+    sign = jnp.sign(a) * jnp.sign(b)
+    aa, bb = jnp.abs(a), jnp.abs(b)
+    if not use_kernel:
+        return sign * llsmu_multiply_ref(aa, bb, n_bits=n_bits,
+                                         frac_bits=frac_bits, c=c)
+    shape = aa.shape
+    flat_a = aa.reshape(-1)
+    flat_b = bb.reshape(-1)
+    n = flat_a.shape[0]
+    pad = (-n) % LANE
+    if pad:
+        flat_a = jnp.pad(flat_a, (0, pad))
+        flat_b = jnp.pad(flat_b, (0, pad))
+    out = llsmu_multiply(flat_a, flat_b, n_bits=n_bits, frac_bits=frac_bits,
+                         c=c, tile=LANE, interpret=interpret)
+    return sign * out[:n].reshape(shape)

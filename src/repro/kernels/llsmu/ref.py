@@ -1,0 +1,11 @@
+"""Oracle for the LLSMu kernel — delegates to the core fixed-point model."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.llsmu import llsmu_fixed
+
+
+def llsmu_multiply_ref(a: jax.Array, b: jax.Array, *, n_bits: int = 4,
+                       frac_bits: int = 12, c: float = 0.08333) -> jax.Array:
+    return llsmu_fixed(a, b, n_bits=n_bits, frac_bits=frac_bits, c=c)

@@ -1,0 +1,81 @@
+"""Power-of-two gradient (de)quantisation Pallas kernels.
+
+Beyond-paper generalisation of ITP-STDP's po2 representation to the
+distributed-training substrate: gradients crossing the slow inter-pod links
+are compressed to  sign · 2^e  with an int8 wire format
+
+    bit 7   : sign
+    bits 0-6: biased exponent  e + BIAS   (0 encodes exact zero)
+
+Encode:  e = round(log2 |x|) clipped to [-BIAS+1, 127-BIAS]   (round-to-
+nearest in log space = round-to-nearest-po2 in linear space, the same
+quantiser ITP-STDP applies to its weight updates).
+Decode:  x ≈ sign · 2^(code - BIAS).
+
+4× wire compression vs f32, 2× vs bf16; quantisation is unbiased in log
+space with worst-case relative error 2^0.5-1 ≈ 41 % per element, zero-mean
+over a pod's gradient population (validated in tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIAS = 64
+
+
+def _encode_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    mag = jnp.abs(x)
+    # round(log2|x|): exponent of the nearest power of two
+    e = jnp.round(jnp.log2(jnp.maximum(mag, 1e-38)))
+    e = jnp.clip(e, -BIAS + 1, 127 - BIAS)
+    code = (e + BIAS).astype(jnp.int32)
+    code = jnp.where(mag == 0.0, 0, code)
+    sign_bit = jnp.where(x < 0.0, 128, 0)
+    o_ref[...] = (code | sign_bit).astype(jnp.int32)
+
+
+def _decode_kernel(c_ref, o_ref):
+    c = c_ref[...]
+    sign = jnp.where((c & 128) != 0, -1.0, 1.0)
+    code = c & 127
+    # exact 2^e via exponent-field construction (XLA exp2 is inexact even
+    # at integer points); this is the literal decoder circuit
+    bits = (code - BIAS + 127) << 23
+    val = sign * jax.lax.bitcast_convert_type(bits, jnp.float32)
+    o_ref[...] = jnp.where(code == 0, 0.0, val)
+
+
+def _elementwise_call(kern, x: jax.Array, out_dtype, *, tile: int,
+                      interpret: bool) -> jax.Array:
+    n = x.shape[-1]
+    if n % tile:
+        raise ValueError(f"tile {tile} must divide {n}")
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), out_dtype),
+        interpret=interpret,
+    )(x.reshape(1, n))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def po2_encode(x: jax.Array, *, tile: int = 512,
+               interpret: bool = True) -> jax.Array:
+    """f32 (n,) → po2 codes (n,) int32 (low byte is the wire format)."""
+    return _elementwise_call(_encode_kernel, x.astype(jnp.float32),
+                             jnp.int32, tile=tile, interpret=interpret)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def po2_decode(c: jax.Array, *, tile: int = 512,
+               interpret: bool = True) -> jax.Array:
+    """po2 codes (n,) int32 → f32 (n,)."""
+    return _elementwise_call(_decode_kernel, c.astype(jnp.int32),
+                             jnp.float32, tile=tile, interpret=interpret)[0]

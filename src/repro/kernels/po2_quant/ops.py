@@ -1,0 +1,35 @@
+"""Jit'd wrappers: shape-generic po2 quantisation for gradient pytrees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.po2_quant.kernel import po2_decode, po2_encode
+from repro.kernels.po2_quant.ref import po2_decode_ref, po2_encode_ref
+
+LANE = 128
+
+
+def po2_quantize(x: jax.Array, *, use_kernel: bool = False,
+                 interpret: bool = True) -> jax.Array:
+    """Round every element to the nearest power of two (sign preserved).
+
+    ``use_kernel=False`` (default) uses the jnp path — the quantiser is
+    memory-bound and XLA fuses it into the surrounding collective; the
+    Pallas path exists to pin the VMEM tiling on real TPU and for tests.
+    """
+    if not use_kernel:
+        return po2_decode_ref(po2_encode_ref(x))
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % LANE
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    codes = po2_encode(flat, tile=LANE, interpret=interpret)
+    out = po2_decode(codes, tile=LANE, interpret=interpret)
+    return out[:n].reshape(shape)
+
+
+def po2_quantize_tree(tree, **kw):
+    return jax.tree_util.tree_map(lambda g: po2_quantize(g, **kw), tree)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for po2 gradient (de)quantisation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIAS = 64
+
+
+def exact_exp2_int(e: jax.Array) -> jax.Array:
+    """Exact 2^e for int32 e ∈ [-126, 127], by f32 exponent-field
+    construction — XLA's polynomial ``exp2`` is NOT exactly 2^e even at
+    integer inputs (e.g. exp2(13) → 8192.0039 on CPU), which would corrupt
+    the wire format.  This is also literally the hardware decoder circuit.
+    """
+    bits = (e.astype(jnp.int32) + 127) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def po2_encode_ref(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    mag = jnp.abs(x)
+    e = jnp.round(jnp.log2(jnp.maximum(mag, 1e-38)))
+    e = jnp.clip(e, -BIAS + 1, 127 - BIAS)
+    code = (e + BIAS).astype(jnp.int32)
+    code = jnp.where(mag == 0.0, 0, code)
+    return code | jnp.where(x < 0.0, 128, 0)
+
+
+def po2_decode_ref(c: jax.Array) -> jax.Array:
+    c = c.astype(jnp.int32)
+    sign = jnp.where((c & 128) != 0, -1.0, 1.0)
+    code = c & 127
+    val = sign * exact_exp2_int(code - BIAS)
+    return jnp.where(code == 0, 0.0, val)
+
+
+def po2_roundtrip_ref(x: jax.Array) -> jax.Array:
+    """Quantise to the nearest power of two (the ITP-STDP quantiser)."""
+    return po2_decode_ref(po2_encode_ref(x))

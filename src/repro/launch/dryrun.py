@@ -1,0 +1,331 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against placeholder devices, and extract the roofline terms.
+
+The two lines above MUST run before any jax import (device count locks at
+first init) — this module is the only place the 512-device override is set.
+
+Per cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(*specs)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective-bytes(HLO parse)
+
+Outputs one JSON per cell under --out (default experiments/dryrun/) that
+benchmarks/roofline.py and EXPERIMENTS.md §Dry-run consume.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell, both meshes
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_NAMES, get_config, shapes_for
+from repro.configs.shapes import SHAPES
+from repro.launch.mesh import describe, make_production_mesh
+from repro.launch.specs import plan_cell
+from repro.distributed.sharding import use_mesh
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # replica_groups=[G,S]<=[N]: G groups of size S
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum collective operand bytes per op kind from optimised HLO text.
+
+    Result shapes are read off each collective line; operand bytes follow
+    from the op semantics (all-gather operand = result/g, reduce-scatter
+    operand = result·g, others operand = result).  ``wire`` is the ring-
+    algorithm per-device byte estimate used for the §Perf discussion.
+    """
+    stats = {k: {"count": 0, "operand_bytes": 0, "wire_bytes": 0}
+             for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip().lstrip("%")
+        m = re.match(r"[\w.\-]+ = (.+?) ([\w\-]+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        # normalise fused variants like all-gather-start
+        base = None
+        for k in _COLLECTIVES:
+            if op == k or op.startswith(k + "-"):
+                base = k
+                break
+        if base is None or op.endswith("-done"):
+            continue
+        result_bytes = sum(_shape_bytes(d, s)
+                           for d, s in _SHAPE_RE.findall(m.group(1)))
+        g = max(_group_size(line), 1)
+        if base == "all-gather":
+            operand = result_bytes // g
+            wire = result_bytes * (g - 1) // g
+        elif base == "reduce-scatter":
+            operand = result_bytes * g
+            wire = result_bytes * (g - 1)
+        elif base == "all-reduce":
+            operand = result_bytes
+            wire = 2 * result_bytes * (g - 1) // g
+        elif base == "all-to-all":
+            operand = result_bytes
+            wire = result_bytes * (g - 1) // g
+        else:  # collective-permute
+            operand = result_bytes
+            wire = result_bytes
+        stats[base]["count"] += 1
+        stats[base]["operand_bytes"] += operand
+        stats[base]["wire_bytes"] += wire
+    stats["total_operand_bytes"] = sum(
+        v["operand_bytes"] for k, v in stats.items() if isinstance(v, dict))
+    stats["total_wire_bytes"] = sum(
+        v["wire_bytes"] for k, v in stats.items() if isinstance(v, dict))
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Per-cell dry run
+# ---------------------------------------------------------------------------
+
+def _analyse_compiled(compiled) -> dict:
+    out = {}
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                out.setdefault("memory", {})[attr] = int(v)
+    cost = compiled.cost_analysis()
+    if cost:
+        keep = ("flops", "bytes accessed", "transcendentals",
+                "optimal_seconds")
+        out["cost"] = {k: float(v) for k, v in cost.items()
+                       if k in keep and isinstance(v, (int, float))}
+    out["collectives"] = parse_collectives(compiled.as_text())
+    return out
+
+
+def _lower_and_compile(cfg, shape, mesh, *, unroll: bool):
+    from repro.train.train_step import TrainConfig
+    plan = plan_cell(cfg, shape, mesh,
+                     train_cfg=TrainConfig(unroll=unroll))
+    jitted = jax.jit(plan.fn,
+                     in_shardings=plan.in_shardings,
+                     out_shardings=plan.out_shardings,
+                     donate_argnums=plan.donate)
+    t0 = time.time()
+    lowered = jitted.lower(*plan.args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    return compiled, round(t_lower, 2), round(t_compile, 2)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, analysis: bool | str = True) -> dict:
+    """Lower+compile one cell.
+
+    Two programs per cell: the *scanned* production program (validates the
+    real deployment path, gives memory_analysis) and, when ``analysis``,
+    a measurement program with true FLOP/collective counts —
+    HloCostAnalysis counts while-loop bodies once, so scanned-module
+    numbers undercount by ~n_layers.  ``analysis=True`` fully unrolls
+    (slow but exact); ``analysis='extrapolate'`` calibrates F_out + L·F_body
+    from 2-/4-layer unrolled compiles (fast, <2 % error — see
+    launch/extrapolate.py).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": describe(mesh), "multi_pod": multi_pod,
+        "n_devices": int(mesh.devices.size), "ok": False,
+    }
+    try:
+        with use_mesh(mesh):
+            compiled, t_l, t_c = _lower_and_compile(cfg, shape, mesh,
+                                                    unroll=False)
+            rec["time_lower_s"], rec["time_compile_s"] = t_l, t_c
+            rec.update(_analyse_compiled(compiled))
+            del compiled
+            if analysis == "extrapolate":
+                from repro.launch.extrapolate import extrapolate_cell
+                est = extrapolate_cell(cfg, shape, mesh, parse_collectives)
+                rec["cost_extrapolated"] = {
+                    "flops": est["flops"],
+                    "bytes accessed": est["bytes accessed"],
+                    "transcendentals": est.get("transcendentals", 0.0),
+                }
+                rec["collectives_extrapolated"] = {
+                    "total_operand_bytes": est["coll_operand"],
+                    "total_wire_bytes": est["coll_wire"],
+                    **{k: {"operand_bytes": v} for k, v in est.items()
+                       if k.startswith("coll_")
+                       and k not in ("coll_operand", "coll_wire")},
+                }
+                rec["time_extrapolate_s"] = est["extrapolation_seconds"]
+            elif analysis:
+                compiled_u, t_lu, t_cu = _lower_and_compile(
+                    cfg, shape, mesh, unroll=True)
+                rec["time_unrolled_s"] = round(t_lu + t_cu, 2)
+                a = _analyse_compiled(compiled_u)
+                rec["cost_unrolled"] = a.get("cost", {})
+                rec["collectives_unrolled"] = a["collectives"]
+                rec["memory_unrolled"] = a.get("memory", {})
+                del compiled_u
+            rec["ok"] = True
+            if verbose:
+                mem_str = rec.get("memory", {})
+                cu = rec.get("cost_unrolled") or \
+                    rec.get("cost_extrapolated") or rec.get("cost", {})
+                coll = rec.get("collectives_unrolled") or \
+                    rec.get("collectives_extrapolated") or \
+                    rec.get("collectives", {})
+                print(f"[ok] {arch} × {shape_name} × "
+                      f"{'multi' if multi_pod else 'single'}-pod  "
+                      f"scan {t_l}+{t_c}s unrolled "
+                      f"{rec.get('time_unrolled_s', 0)}s  "
+                      f"flops={cu.get('flops', 0):.3e}  "
+                      f"coll={coll.get('total_operand_bytes', 0):.3e}B "
+                      f"temp={mem_str.get('temp_size_in_bytes', 0):.3e}B",
+                      flush=True)
+    except Exception as e:  # noqa: BLE001 — report, continue the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[FAIL] {arch} × {shape_name} × "
+                  f"{'multi' if multi_pod else 'single'}-pod: {rec['error']}",
+                  flush=True)
+    return rec
+
+
+def cell_filename(arch: str, shape: str, multi_pod: bool) -> str:
+    pod = "multipod" if multi_pod else "singlepod"
+    return f"{arch.replace('.', '_')}__{shape}__{pod}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--analysis",
+                    choices=("auto", "on", "off", "extrapolate"),
+                    default="auto",
+                    help="measurement pass: on = full unroll (exact, slow); "
+                         "extrapolate = 2-/4-layer calibration (fast); "
+                         "auto = extrapolate on single-pod cells only "
+                         "(the roofline table is single-pod per the brief)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.all:
+        cells = [(a, s.name) for a in ARCH_NAMES
+                 for s in shapes_for(get_config(a))]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[args.mesh]
+    n_fail = 0
+    multi_cell = len(cells) * len(pods) > 1
+    for arch, shape in cells:
+        for multi_pod in pods:
+            analysis = {"auto": "extrapolate" if not multi_pod else False,
+                        "on": True, "off": False,
+                        "extrapolate": "extrapolate"}[args.analysis]
+            path = os.path.join(args.out, cell_filename(arch, shape, multi_pod))
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    prev = json.load(f)
+                has_analysis = bool(prev.get("cost_unrolled")
+                                    or prev.get("cost_extrapolated"))
+                if prev.get("ok") and (not analysis or has_analysis):
+                    continue
+            if multi_cell:
+                # one subprocess per cell: a fatal XLA crash (the SPMD
+                # partitioner aborts with a Check failure on some
+                # sharding bugs) must not kill the sweep
+                import subprocess
+                import sys
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape,
+                       "--mesh", "multi" if multi_pod else "single",
+                       "--out", args.out,
+                       "--analysis", "on" if analysis else "off"]
+                env = dict(os.environ)
+                env.pop("XLA_FLAGS", None)   # child sets its own
+                r = subprocess.run(cmd, env=env, capture_output=True,
+                                   text=True)
+                tail = (r.stdout + r.stderr).strip().splitlines()
+                print("\n".join(t for t in tail[-2:] if t), flush=True)
+                if r.returncode != 0 and not os.path.exists(path):
+                    rec = {"arch": arch, "shape": shape,
+                           "multi_pod": multi_pod, "ok": False,
+                           "error": f"fatal crash rc={r.returncode}",
+                           "stderr_tail": "\n".join(tail[-8:])}
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                with open(path) as f:
+                    n_fail += 0 if json.load(f).get("ok") else 1
+            else:
+                rec = run_cell(arch, shape, multi_pod, analysis=analysis)
+                n_fail += 0 if rec["ok"] else 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"dry-run complete: {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a *function* so importing this module never
+touches jax device state (device count is locked at first jax init; the
+dry-run sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+before any jax import to get placeholder devices).
+
+Geometry (DESIGN.md §6):
+  * single-pod: (data=16, model=16)            — 256 chips (one v5e pod)
+  * multi-pod : (pod=2, data=16, model=16)     — 512 chips across 2 pods;
+    the ``pod`` axis carries pure data parallelism over the slower
+    inter-pod links (po2-compressed gradient exchange).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1, pod: int | None = None
+                    ) -> Mesh:
+    """Small meshes for CPU tests (device count permitting)."""
+    if pod is not None:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def describe(mesh: Mesh) -> str:
+    return " × ".join(f"{n}={s}" for n, s in zip(mesh.axis_names,
+                                                 mesh.devices.shape))

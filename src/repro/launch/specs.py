@@ -1,0 +1,210 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+``input_specs(cfg, shape)`` builds the abstract inputs for a given
+(architecture × input-shape) pair — weak-type-correct, shardable, zero
+device allocation — together with ``step_and_shardings`` which pairs them
+with the function the cell lowers:
+
+  * train_*    → ``repro.train.make_train_step``    (params, opt, batch)
+  * prefill_*  → last-token-logits forward           (params, batch)
+  * decode_* / long_* → ``repro.serve.make_serve_step`` (params, cache,
+                        tokens, pos)
+
+Modality frontends are stubs per the brief: the VLM cell feeds
+precomputed patch embeddings ``vis_embed`` (B, n_vis, vis_dim); musicgen's
+EnCodec tokenizer is stubbed by the token stream itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.distributed.sharding import (batch_axes, decode_cache_shardings,
+                                        param_shardings)
+from repro.models import transformer
+from repro.serve.serving import ServeConfig, init_cache, make_serve_step
+from repro.train.optimizer import OptimizerConfig, OptState, init_opt_state
+from repro.train.train_step import TrainConfig, lm_loss, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _sds_like(tree):
+    return jax.tree_util.tree_map(
+        lambda x: SDS(x.shape, x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Abstract model/optimizer state
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg):
+    return jax.eval_shape(
+        lambda k: transformer.init_model(k, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(cfg):
+    return jax.eval_shape(init_opt_state, abstract_params(cfg))
+
+
+def abstract_cache(cfg, shape: ShapeSpec, kv_dtype="bfloat16"):
+    scfg = ServeConfig(max_tokens=shape.seq_len, batch=shape.global_batch,
+                       kv_dtype=kv_dtype)
+    return jax.eval_shape(lambda: init_cache(cfg, scfg))
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["vis_embed"] = SDS((B, cfg.n_vis_tokens, cfg.vis_dim),
+                                 jnp.bfloat16)
+    return batch
+
+
+def decode_inputs(cfg, shape: ShapeSpec, kv_dtype="bfloat16"):
+    B = shape.global_batch
+    inputs = {
+        "cache": abstract_cache(cfg, shape, kv_dtype),
+        "tokens": SDS((B, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        # cross K/V are precomputed at prefill; pass them via the cache
+        hd = cfg.resolved_head_dim
+        n_cross = len(cfg.cross_attn_layers)
+        cross = SDS((n_cross, B, cfg.n_vis_tokens, cfg.n_kv_heads, hd),
+                    jnp.bfloat16)
+        inputs["cache"] = inputs["cache"]._replace(cross_k=cross,
+                                                   cross_v=cross)
+    return inputs
+
+
+def input_specs(cfg, shape: ShapeSpec, kv_dtype="bfloat16") -> dict:
+    """All abstract inputs for one dry-run cell (excluding model state)."""
+    if shape.kind in ("train", "prefill"):
+        return train_batch_specs(cfg, shape)
+    return decode_inputs(cfg, shape, kv_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Step + shardings per cell
+# ---------------------------------------------------------------------------
+
+def _batch_shardings(mesh: Mesh, batch: dict) -> dict:
+    ax = batch_axes(mesh)
+    def one(x):
+        return NamedSharding(mesh, P(ax, *([None] * (len(x.shape) - 1))))
+    return jax.tree_util.tree_map(one, batch)
+
+
+@dataclasses.dataclass
+class CellPlan:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+    fn: Callable                  # the pure step function
+    args: tuple                   # abstract args (SDS pytrees)
+    in_shardings: tuple
+    out_shardings: Any            # None → let GSPMD choose
+    donate: tuple = ()
+
+
+def make_prefill_fn(cfg, train_cfg: TrainConfig = TrainConfig()):
+    def step(params, batch):
+        kw = {}
+        if cfg.family == "vlm":
+            kw["vis_embed"] = batch["vis_embed"]
+        logits, _ = transformer.forward(
+            params, cfg, tokens=batch["tokens"], remat=train_cfg.remat,
+            last_logits_only=True, unroll=train_cfg.unroll, **kw)
+        return logits
+    return step
+
+
+def plan_cell(cfg, shape: ShapeSpec, mesh: Mesh, *,
+              opt_cfg: OptimizerConfig | None = None,
+              train_cfg: TrainConfig = TrainConfig(),
+              kv_dtype: str = "bfloat16") -> CellPlan:
+    """Build the (fn, abstract args, shardings) plan for one cell."""
+    from repro.distributed.sharding import use_sharding_profile
+    opt_cfg = opt_cfg or OptimizerConfig()
+    params = abstract_params(cfg)
+    profile = train_cfg.sharding_profile
+
+    def profiled(fn):
+        # the profile governs both sharding-tree construction (here) and
+        # the activation constraints resolved at trace time (inside jit)
+        def wrapped(*a, **kw):
+            with use_sharding_profile(profile):
+                return fn(*a, **kw)
+        return wrapped
+
+    with use_sharding_profile(profile):
+        p_sh = param_shardings(cfg, params, mesh)
+
+        if shape.kind == "train":
+            batch = train_batch_specs(cfg, shape)
+            opt_state = abstract_opt_state(cfg)
+            o_sh = OptState(step=NamedSharding(mesh, P()), mu=p_sh, nu=p_sh)
+            fn = make_train_step(cfg, opt_cfg, train_cfg, mesh=mesh)
+            return CellPlan(
+                fn=profiled(fn),
+                args=(params, opt_state, batch),
+                in_shardings=(p_sh, o_sh, _batch_shardings(mesh, batch)),
+                out_shardings=(p_sh, o_sh, None),
+                donate=(0, 1),
+            )
+
+        if shape.kind == "prefill":
+            batch = train_batch_specs(cfg, shape)
+            # drop labels: prefill is inference
+            batch = {k: v for k, v in batch.items() if k != "labels"}
+            fn = make_prefill_fn(cfg, train_cfg)
+            return CellPlan(
+                fn=profiled(fn),
+                args=(params, batch),
+                in_shardings=(p_sh, _batch_shardings(mesh, batch)),
+                out_shardings=None,
+            )
+
+        # decode
+        inputs = decode_inputs(cfg, shape, kv_dtype)
+        cache = inputs["cache"]
+        c_sh = decode_cache_shardings(cache, mesh)
+        scfg = ServeConfig(max_tokens=shape.seq_len,
+                           batch=shape.global_batch,
+                           kv_dtype=kv_dtype, unroll=train_cfg.unroll)
+        serve = make_serve_step(cfg, scfg)
+
+        def fn(params, cache, tokens, pos):
+            return serve(params, cache, tokens, pos)
+
+        tok_sh = NamedSharding(
+            mesh, P(batch_axes(mesh)
+                    if shape.global_batch % _prod(mesh, batch_axes(mesh)) == 0
+                    else None, None))
+        return CellPlan(
+            fn=profiled(fn),
+            args=(params, cache, inputs["tokens"], inputs["pos"]),
+            in_shardings=(p_sh, c_sh, tok_sh, NamedSharding(mesh, P())),
+            out_shardings=(None, c_sh),
+            donate=(1,),
+        )
+
+
+def _prod(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,115 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs end-to-end on whatever devices exist (CPU smoke scale → TPU pods): a
+synthetic-token LM run with the full production control loop — sharded
+init, jitted train step, async checkpointing, restart-on-failure,
+straggler watchdog.  For the paper's own SNN training path use
+``examples/train_snn.py`` (the learning-engine loop has no gradients).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config, get_smoke_config
+from repro.data import LMBatchSpec, lm_batches
+from repro.distributed.fault_tolerance import (FailureInjector, RunnerConfig,
+                                               TrainingRunner)
+from repro.distributed.sharding import use_mesh
+from repro.launch.mesh import describe, make_debug_mesh
+from repro.train import (OptimizerConfig, TrainConfig, init_training,
+                         make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--remat", choices=("none", "full", "dots"),
+                    default="none")
+    ap.add_argument("--po2-update", action="store_true",
+                    help="ITP-AdamW: po2-quantised optimizer updates")
+    ap.add_argument("--data", type=int, default=0,
+                    help="data-parallel mesh axis (0 = no mesh)")
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--inject-failure-at", type=int, default=-1)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    opt_cfg = OptimizerConfig(lr=args.lr, total_steps=args.steps,
+                              warmup_steps=max(args.steps // 20, 5),
+                              po2_update=args.po2_update)
+    train_cfg = TrainConfig(remat=args.remat)
+
+    mesh = None
+    if args.data > 0:
+        mesh = make_debug_mesh(data=args.data, model=args.model)
+        print(f"mesh: {describe(mesh)}")
+
+    ctx = use_mesh(mesh) if mesh is not None else use_mesh(None)
+    with ctx:
+        params, opt_state = init_training(jax.random.PRNGKey(0), cfg, opt_cfg,
+                                          mesh)
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg, train_cfg, mesh))
+
+        spec = LMBatchSpec(batch=args.batch, seq=args.seq,
+                           vocab=cfg.vocab_size)
+
+        def batch_for(step: int):
+            return next(lm_batches(jax.random.PRNGKey(1000 + step), spec,
+                                   n_steps=1))
+
+        state = {"params": params, "opt": opt_state}
+
+        def wrapped(state, batch):
+            p, o, metrics = step_fn(state["params"], state["opt"], batch)
+            return {"params": p, "opt": o}, metrics
+
+        runner = TrainingRunner(
+            RunnerConfig(ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every),
+            wrapped, batch_for)
+        injector = None
+        if args.inject_failure_at >= 0:
+            injector = FailureInjector({args.inject_failure_at})
+
+        t0 = time.time()
+        n_logged = [0]
+
+        orig_step = runner.step_fn
+
+        def logging_step(state, batch):
+            out, metrics = orig_step(state, batch)
+            n = n_logged[0]
+            if n % args.log_every == 0:
+                loss = float(metrics["loss"])
+                toks = float(metrics["tokens"]) * args.log_every
+                dt = time.time() - t0
+                print(f"step {n:5d}  loss {loss:.4f}  "
+                      f"lr {float(metrics['lr']):.2e}  "
+                      f"gnorm {float(metrics['grad_norm']):.3f}  "
+                      f"({n / max(dt, 1e-9):.2f} it/s)", flush=True)
+            n_logged[0] += 1
+            return out, metrics
+
+        runner.step_fn = logging_step
+        state = runner.run(state, args.steps, injector)
+        print(f"done: {args.steps} steps in {time.time() - t0:.1f}s; "
+              f"restarts={runner.restarts}; "
+              f"stragglers={len(runner.watchdog.stragglers)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,236 @@
+"""Attention: GQA/MHA with RoPE, qk-norm, QKV bias, sliding windows,
+cross-attention (VLM), and block-wise online-softmax for long sequences.
+
+Long-sequence path: queries are processed in static blocks (Python-unrolled,
+so each block's KV extent is a *static* slice — no flops are spent on fully
+masked KV blocks, unlike a dense-mask implementation, and XLA's
+cost_analysis sees the true flop count).  Within a query block, KV blocks
+are consumed by a ``lax.scan`` with the streaming-softmax recurrence, so
+peak memory is O(block_q · block_kv) per head instead of O(S²).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import (Params, apply_rope, cdtype, dense_init,
+                                 pdtype, rms_head_norm)
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, *, cross: bool = False) -> Params:
+    hd = cfg.resolved_head_dim
+    dt = pdtype(cfg)
+    kv_in = cfg.vis_dim if cross else cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dt),
+        "wk": dense_init(ks[1], kv_in, cfg.n_kv_heads * hd, dt),
+        "wv": dense_init(ks[2], kv_in, cfg.n_kv_heads * hd, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+    if cfg.qk_norm or cross:
+        # llama-3.2 vision cross-attn normalises q/k as well
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    if cross:
+        p["gate_attn"] = jnp.zeros((), dt)   # tanh-gated residual
+    return p
+
+
+def project_qkv(p: Params, x: jax.Array, kv_src: jax.Array, cfg,
+                *, positions: jax.Array | None,
+                kv_positions: jax.Array | None = None,
+                rope: bool = True) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns q (B,S,H,hd), k,v (B,T,K,hd); applies qk-norm + RoPE."""
+    hd = cfg.resolved_head_dim
+    B, S, _ = x.shape
+    T = kv_src.shape[1]
+    q = x @ p["wq"].astype(x.dtype)
+    k = kv_src @ p["wk"].astype(x.dtype)
+    v = kv_src @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = constrain(q.reshape(B, S, cfg.n_heads, hd), ("batch", None, "tp", None))
+    k = constrain(k.reshape(B, T, cfg.n_kv_heads, hd), ("batch", None, "tp", None))
+    v = constrain(v.reshape(B, T, cfg.n_kv_heads, hd), ("batch", None, "tp", None))
+    if "q_norm" in p:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    if rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kp = kv_positions if kv_positions is not None else positions
+        k = apply_rope(k, kp, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(qb: jax.Array, kb: jax.Array, scale: float) -> jax.Array:
+    """(B,bq,K,G,hd) × (B,bt,K,hd) → f32 (B,K,G,bq,bt)."""
+    return jnp.einsum("bqkgd,btkd->bkgqt", qb, kb,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _gqa_accum(pb: jax.Array, vb: jax.Array) -> jax.Array:
+    """(B,K,G,bq,bt) × (B,bt,K,hd) → f32 (B,K,G,bq,hd)."""
+    return jnp.einsum("bkgqt,btkd->bkgqd", pb.astype(vb.dtype), vb,
+                      preferred_element_type=jnp.float32)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        window: int = 0, block_q: int = 1024,
+                        block_kv: int = 1024, q_offset: int = 0) -> jax.Array:
+    """Causal (optionally sliding-window) attention, O(block²) memory.
+
+    q: (B,S,H,hd); k,v: (B,T,K,hd) with T ≥ S (self-attention uses T=S;
+    chunked prefill may pass a longer KV with ``q_offset``).
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    bq = min(block_q, S)
+    bkv = min(block_kv, T)
+    if S % bq or T % bkv:
+        raise ValueError(f"blocks ({bq},{bkv}) must divide (S={S}, T={T})")
+    qr = q.reshape(B, S, K, G, hd)
+
+    out_blocks = []
+    for qi in range(S // bq):
+        q_lo = q_offset + qi * bq                      # absolute start row
+        qb = qr[:, qi * bq:(qi + 1) * bq]
+        # static KV extent for this query block
+        hi_blk = min((q_lo + bq + bkv - 1) // bkv, T // bkv)
+        lo_blk = 0 if window <= 0 else max(0, (q_lo - window + 1) // bkv)
+        n_blk = hi_blk - lo_blk
+        ks_ = k[:, lo_blk * bkv:hi_blk * bkv].reshape(B, n_blk, bkv, K, hd)
+        vs_ = v[:, lo_blk * bkv:hi_blk * bkv].reshape(B, n_blk, bkv, K, hd)
+        blk_ids = jnp.arange(lo_blk, hi_blk)
+
+        m0 = jnp.full((B, K, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, K, G, bq, hd), jnp.float32)
+        q_pos = q_lo + jnp.arange(bq)
+
+        def step(carry, xs):
+            m, l, acc = carry
+            kb, vb, bi = xs
+            s = _gqa_scores(qb, kb, scale)             # (B,K,G,bq,bkv)
+            kv_pos = bi * bkv + jnp.arange(bkv)
+            mask = q_pos[:, None] >= kv_pos[None, :]
+            if window > 0:
+                mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            pexp = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + jnp.sum(pexp, axis=-1)
+            acc_new = acc * corr[..., None] + _gqa_accum(pexp, vb)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (ks_.swapaxes(0, 1), vs_.swapaxes(0, 1), blk_ids))
+        ob = acc / jnp.maximum(l, 1e-30)[..., None]    # (B,K,G,bq,hd)
+        out_blocks.append(ob.transpose(0, 3, 1, 2, 4).reshape(B, bq, H, hd))
+    return jnp.concatenate(out_blocks, axis=1).astype(q.dtype)
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    mask: jax.Array | None) -> jax.Array:
+    """Unblocked attention (cross-attention / decode / short sequences)."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    s = _gqa_scores(q.reshape(B, S, K, G, hd), k, scale)   # (B,K,G,S,T)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _gqa_accum(p, v)                                    # (B,K,G,S,hd)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd).astype(q.dtype)
+
+
+def self_attention_train(p: Params, x: jax.Array, cfg, *,
+                         positions: jax.Array, window: int = 0,
+                         block_q: int = 1024, block_kv: int = 1024) -> jax.Array:
+    """Causal self-attention for the training/prefill path."""
+    q, k, v = project_qkv(p, x, x, cfg, positions=positions,
+                          rope=cfg.pos_embedding == "rope")
+    B, S = x.shape[:2]
+    if S <= block_q:  # short sequence: dense with causal mask
+        pos = positions[0] if positions.ndim > 1 else positions
+        mask = pos[:, None] >= pos[None, :]
+        if window > 0:
+            mask &= (pos[:, None] - pos[None, :]) < window
+        o = dense_attention(q, k, v, mask)
+    else:
+        o = blockwise_attention(q, k, v, window=window, block_q=block_q,
+                                block_kv=block_kv)
+    hd = cfg.resolved_head_dim
+    return o.reshape(B, S, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)
+
+
+def cross_attention(p: Params, x: jax.Array, vis_kv: tuple[jax.Array, jax.Array],
+                    cfg) -> jax.Array:
+    """Cross-attention to precomputed vision K/V (B,Nv,K,hd); tanh-gated."""
+    hd = cfg.resolved_head_dim
+    B, S, _ = x.shape
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.n_heads, hd)
+    q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+    k, v = vis_kv
+    o = dense_attention(q, k, v, None)
+    o = o.reshape(B, S, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)
+    return jnp.tanh(p["gate_attn"].astype(jnp.float32)).astype(x.dtype) * o
+
+
+def vision_kv(p: Params, vis_embed: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """Project vision embeddings to K/V once (shared across decode steps)."""
+    hd = cfg.resolved_head_dim
+    B, Nv, _ = vis_embed.shape
+    k = (vis_embed @ p["wk"].astype(vis_embed.dtype)).reshape(B, Nv, cfg.n_kv_heads, hd)
+    v = (vis_embed @ p["wv"].astype(vis_embed.dtype)).reshape(B, Nv, cfg.n_kv_heads, hd)
+    k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+def decode_attention(p: Params, x: jax.Array, k_cache: jax.Array,
+                     v_cache: jax.Array, pos: jax.Array, cfg, *,
+                     window: int = 0) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode: query len 1 against the (possibly ring) cache.
+
+    x: (B,1,D); caches: (B,T,K,hd) *already containing* this step's K/V is
+    NOT assumed — we project, write at ``pos`` (mod T for ring), and attend.
+    Returns (out (B,1,D), k_cache', v_cache').
+    """
+    B, _, _ = x.shape
+    T = k_cache.shape[1]
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = project_qkv(p, x, x, cfg, positions=positions,
+                                  rope=cfg.pos_embedding == "rope")
+    slot = pos % T if window > 0 else pos              # ring for SWA
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0))
+    # validity: ring cache → all written slots; linear cache → idx ≤ pos
+    idx = jnp.arange(T)
+    if window > 0:
+        valid = idx < jnp.minimum(pos + 1, T)
+    else:
+        valid = idx <= pos
+    o = dense_attention(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+                        valid[None, None, None, None, :])
+    return (o.reshape(B, 1, cfg.n_heads * hd) @ p["wo"].astype(x.dtype),
+            k_cache, v_cache)

@@ -1,0 +1,78 @@
+"""KV-cache containers for decode, including int8-quantised storage.
+
+The int8 path stores per-(token, head) symmetric scales — amax over the
+head_dim vector — which keeps dequantisation a fused elementwise multiply
+on the attention read path.  At 512k-token contexts the KV cache dominates
+serving HBM (DESIGN.md §6); int8 halves it vs bf16 with <0.5 % logit RMSE
+(tests/test_serve.py), and is thematically the paper's own 8-bit trick
+applied to the serving substrate.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KVCache(NamedTuple):
+    """Stacked-over-layers cache: k/v (L, B, T, K, hd)."""
+    k: jax.Array
+    v: jax.Array
+    k_scale: jax.Array | None = None   # (L, B, T, K, 1) when int8
+    v_scale: jax.Array | None = None
+
+    @property
+    def quantised(self) -> bool:
+        return self.k.dtype == jnp.int8
+
+
+def init_kv_cache(n_layers: int, batch: int, max_t: int, n_kv: int,
+                  head_dim: int, dtype=jnp.bfloat16) -> KVCache:
+    shape = (n_layers, batch, max_t, n_kv, head_dim)
+    if dtype == jnp.int8:
+        return KVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.ones(shape[:-1] + (1,), jnp.float32),
+            v_scale=jnp.ones(shape[:-1] + (1,), jnp.float32))
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def quantise_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """bf16 (…, hd) → (int8 values, f32 scale (…, 1))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantise_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def cache_write(cache_k: jax.Array, cache_v: jax.Array,
+                k_scale: jax.Array | None, v_scale: jax.Array | None,
+                k_new: jax.Array, v_new: jax.Array, slot: jax.Array):
+    """Write one step's K/V at ``slot`` for a single layer's (B,T,K,hd) slice."""
+    if cache_k.dtype == jnp.int8:
+        kq, ks = quantise_kv(k_new)
+        vq, vs = quantise_kv(v_new)
+        cache_k = jax.lax.dynamic_update_slice(cache_k, kq, (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, vq, (0, slot, 0, 0))
+        k_scale = jax.lax.dynamic_update_slice(k_scale, ks, (0, slot, 0, 0))
+        v_scale = jax.lax.dynamic_update_slice(v_scale, vs, (0, slot, 0, 0))
+    else:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k_new.astype(cache_k.dtype), (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v_new.astype(cache_v.dtype), (0, slot, 0, 0))
+    return cache_k, cache_v, k_scale, v_scale
+
+
+def cache_read(cache_k: jax.Array, cache_v: jax.Array,
+               k_scale: jax.Array | None, v_scale: jax.Array | None,
+               dtype=jnp.bfloat16) -> tuple[jax.Array, jax.Array]:
+    if cache_k.dtype == jnp.int8:
+        return (dequantise_kv(cache_k, k_scale, dtype),
+                dequantise_kv(cache_v, v_scale, dtype))
+    return cache_k.astype(dtype), cache_v.astype(dtype)

@@ -1,0 +1,152 @@
+"""Shared model layers: norms, rotary/sinusoidal positions, MLPs, embeddings.
+
+Pure-function style: ``init_*`` builds a param pytree, the matching apply
+function consumes it.  Compute runs in ``cfg.dtype`` (bf16 by default) with
+fp32 master params; norm statistics and softmax always accumulate in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+Params = dict[str, Any]
+
+
+def cdtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * scale
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg, d: int) -> Params:
+    p = {"scale": jnp.ones((d,), pdtype(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), pdtype(cfg))
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, cfg) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale: jax.Array, x: jax.Array, eps: float) -> jax.Array:
+    """Per-head RMSNorm on (..., head_dim) — qwen3 qk_norm."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate-half RoPE.  x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, d_model: int) -> jax.Array:
+    """Classic transformer sinusoidal embedding (musicgen)."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    if cfg.mlp == "swiglu":
+        return {
+            "gate": dense_init(ks[0], d_model, d_ff, dt),
+            "up": dense_init(ks[1], d_model, d_ff, dt),
+            "down": dense_init(ks[2], d_ff, d_model, dt),
+        }
+    return {
+        "up": dense_init(ks[0], d_model, d_ff, dt),
+        "up_bias": jnp.zeros((d_ff,), dt),
+        "down": dense_init(ks[1], d_ff, d_model, dt),
+        "down_bias": jnp.zeros((d_model,), dt),
+    }
+
+
+def apply_mlp(p: Params, x: jax.Array, cfg) -> jax.Array:
+    dt = x.dtype
+    if cfg.mlp == "swiglu":
+        g = constrain(x @ p["gate"].astype(dt), ("batch", None, "tp"))
+        u = constrain(x @ p["up"].astype(dt), ("batch", None, "tp"))
+        return (jax.nn.silu(g) * u) @ p["down"].astype(dt)
+    h = x @ p["up"].astype(dt) + p["up_bias"].astype(dt)
+    h = jax.nn.gelu(constrain(h, ("batch", None, "tp")))
+    return h @ p["down"].astype(dt) + p["down_bias"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg) -> Params:
+    dt = pdtype(cfg)
+    p = {"tok": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model)) * 0.02
+                 ).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["out"] = dense_init(jax.random.fold_in(key, 1), cfg.d_model,
+                              cfg.vocab_size, dt)
+    return p
+
+
+def embed(p: Params, tokens: jax.Array, cfg) -> jax.Array:
+    return p["tok"].astype(cdtype(cfg))[tokens]
+
+
+def unembed(p: Params, x: jax.Array, cfg) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ p["tok"].astype(x.dtype).T
+    else:
+        logits = x @ p["out"].astype(x.dtype)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts layer: top-k routing with per-group expert capacity.
+
+TPU-native dispatch (GShard/MaxText lineage, gather/scatter formulation):
+tokens are grouped (training: one group per batch row), each expert takes
+its top-C tokens per group (C = S·k/E·capacity_factor), selected tokens are
+gathered into a dense (G, E, C, D) block, experts run as one batched einsum
+(MXU-friendly, no ragged shapes), and results scatter-add back.  Tokens
+beyond capacity are dropped (standard capacity-based semantics); the
+combine weights of dropped tokens are zero so the residual path carries
+them unchanged.
+
+Expert parallelism: the expert axis shards over 'model' when E divides the
+axis (phi3.5: 16/16); otherwise experts shard internally over d_ff
+(qwen2-moe: 1408/16) — see distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain, current_mesh
+from repro.models.layers import Params, dense_init, pdtype
+
+
+def _ep_active(cfg) -> bool:
+    mesh = current_mesh()
+    return mesh is not None and cfg.experts_alloc % mesh.shape["model"] == 0
+
+
+def moe_capacity(cfg, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.n_experts_per_tok * cfg.capacity_factor
+            / cfg.n_experts)
+    return min(max(c, 1), tokens_per_group)
+
+
+def init_moe(key, cfg) -> Params:
+    ks = jax.random.split(key, 5)
+    dt = pdtype(cfg)
+    # expert tables allocate experts_alloc rows: padding experts (never
+    # routed — their scores stay 0) buy EP divisibility, e.g. qwen2-moe's
+    # 60 experts padded to 64 = 4/device on a model=16 axis (6 % compute
+    # overcapacity versus TP-inside-expert resharding every layer)
+    d, e, f = cfg.d_model, cfg.experts_alloc, cfg.moe_d_ff
+    p = {
+        "router": dense_init(ks[0], d, cfg.n_experts, dt, scale=0.02),
+        "gate": (jax.random.truncated_normal(ks[1], -2, 2, (e, d, f)) / jnp.sqrt(d)).astype(dt),
+        "up": (jax.random.truncated_normal(ks[2], -2, 2, (e, d, f)) / jnp.sqrt(d)).astype(dt),
+        "down": (jax.random.truncated_normal(ks[3], -2, 2, (e, f, d)) / jnp.sqrt(f)).astype(dt),
+    }
+    if cfg.shared_d_ff:
+        sk = jax.random.split(ks[4], 4)
+        p["shared"] = {
+            "gate": dense_init(sk[0], d, cfg.shared_d_ff, dt),
+            "up": dense_init(sk[1], d, cfg.shared_d_ff, dt),
+            "down": dense_init(sk[2], cfg.shared_d_ff, d, dt),
+            "route": dense_init(sk[3], d, 1, dt, scale=0.02),
+        }
+    return p
+
+
+def apply_moe(p: Params, x: jax.Array, cfg) -> tuple[jax.Array, dict]:
+    """x: (B, S, D) → (out (B,S,D), aux losses dict).
+
+    B is the group axis; decode callers reshape (B,1,D) → (1,B,D) first so
+    the batch forms one group.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.n_experts_per_tok
+    E_alloc = cfg.experts_alloc
+    C = moe_capacity(cfg, S)
+    dt = x.dtype
+
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)   # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, K)                      # (B,S,K)
+    if cfg.norm_topk:
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # (B,S,E_alloc) combine scores: prob where chosen else 0; padding
+    # experts (index ≥ E) keep all-zero scores → capacity rows dead
+    chosen = jax.nn.one_hot(top_i, E_alloc, dtype=jnp.float32)  # (B,S,K,Ea)
+    scores = jnp.einsum("bske,bsk->bse", chosen, top_p)
+
+    # per-expert top-C tokens per group
+    gate_ec, tok_ec = jax.lax.top_k(scores.swapaxes(1, 2), C)   # (B,E,C)
+    live = gate_ec > 0.0                                        # capacity fill
+
+    # gather selected tokens: (B,E,C,D)
+    ep = _ep_active(cfg)
+    e_spec = ("batch", "tp", None, None) if ep else ("batch", None, None, None)
+    f_spec = ("batch", "tp", None, None) if ep else ("batch", None, None, "tp")
+    xg = jnp.take_along_axis(x[:, None, :, :],
+                             tok_ec[..., None], axis=2)
+    xg = constrain(xg, e_spec)
+    h = constrain(jnp.einsum("becd,edf->becf", xg, p["gate"].astype(dt)), f_spec)
+    u = constrain(jnp.einsum("becd,edf->becf", xg, p["up"].astype(dt)), f_spec)
+    y = jnp.einsum("becf,efd->becd", jax.nn.silu(h) * u,
+                   p["down"].astype(dt))
+    y = constrain(y, e_spec)
+    y = y * (gate_ec * live)[..., None].astype(dt)
+
+    # scatter-add back to token positions
+    out = jnp.zeros((B, S, D), dt)
+    b_idx = jnp.arange(B)[:, None, None]
+    out = out.at[b_idx, tok_ec, :].add(y, mode="drop")
+
+    if cfg.shared_d_ff:
+        sp = p["shared"]
+        g = jax.nn.silu(x @ sp["gate"].astype(dt)) * (x @ sp["up"].astype(dt))
+        shared = (g @ sp["down"].astype(dt))
+        route = jax.nn.sigmoid((x @ sp["route"].astype(dt)).astype(jnp.float32))
+        out = out + shared * route.astype(dt)
+
+    # aux losses: Switch load-balance + router z-loss (real experts only)
+    density = jnp.mean(chosen[..., :E].sum(axis=2), axis=(0, 1))
+    router_mean = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(density * router_mean)
+    zloss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    losses = {"moe_aux": cfg.router_aux_weight * aux,
+              "moe_z": cfg.router_z_weight * zloss}
+    return out, losses

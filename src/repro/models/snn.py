@@ -1,0 +1,450 @@
+"""The paper's three validation networks (§IV-C, Table II):
+
+  * 2-layer SNN   — LIF neurons, fully connected, MNIST-class data
+  * 6-layer DCSNN — Izhikevich neurons, conv stack, Fashion-MNIST-class data
+  * 5-layer CSNN  — LIF neurons, 1-D conv stack, motor-fault time series
+
+All layers learn with the selectable STDP rule family ('exact' /
+'itp' (compensated) / 'itp_nocomp'), sharing one protocol so the Table II
+*parity* comparison is apples-to-apples.  Convolutional STDP applies the
+pair-based rule per (patch-pixel → output-neuron) synapse, accumulated over
+spatial positions via patch einsums (the dense layer is the 1×1 special
+case).  Readout is a deterministic ridge regression on time-averaged spike
+counts — identical across rules, so accuracy differences isolate the
+learning rule.
+
+Weight-update magnitudes come from the same bitplane histories as the
+learning engine: ``exact``/``itp`` read the history against e^(-k/τ) ≡
+2^(-k/(τ·ln2)) (identical by eq. 18 — the paper's equivalence), while
+``itp_nocomp`` reads against the raw po2 place values 2^(-k/τ).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.history import SpikeHistory, as_register, init_history, push
+from repro.core.lif import (IzhikevichParams, IzhikevichState, LIFParams,
+                            LIFState, izhikevich_init, izhikevich_step,
+                            lif_init, lif_step)
+from repro.core.stdp import STDPParams, po2_weights
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SNNLayerSpec:
+    kind: str                      # "fc" | "conv2d" | "conv1d" | "pool2d" | "pool1d"
+    out_features: int = 0          # fc width / conv out-channels
+    kernel: int = 3
+    stride: int = 1
+    pool: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNConfig:
+    name: str
+    input_shape: tuple            # (H, W, C) images / (L, C) series / (N,) flat
+    layers: tuple                 # tuple[SNNLayerSpec, ...]
+    neuron: str = "lif"           # lif | izhikevich
+    rule: str = "itp"             # exact | itp | itp_nocomp
+    depth: int = 7                # spike-history depth (§IV-B)
+    pairing: str = "nearest"
+    eta: float = 1.0 / 64.0
+    gain: float = 4.0             # synaptic gain / fan-in normalisation
+    izhi_gain: float = 20.0       # current scale into the Izhikevich model
+    w_bits: int = 8
+    quantise: bool = True
+    inhibition: float = 0.0       # lateral inhibition strength (2-layer SNN)
+    stdp: STDPParams = dataclasses.field(default_factory=STDPParams)
+    lif: LIFParams = dataclasses.field(
+        default_factory=lambda: LIFParams(tau=2.0, v_th=0.6))
+    izhi: IzhikevichParams = dataclasses.field(default_factory=IzhikevichParams)
+
+    @property
+    def compensate(self) -> bool:
+        # 'exact' and compensated 'itp' are numerically identical on the
+        # integer delay grid (paper eq. 18) — both read e^(-k/τ).
+        return self.rule in ("exact", "itp")
+
+
+# The paper's three networks -------------------------------------------------
+
+def mnist_2layer(rule: str = "itp", n_hidden: int = 100, **kw) -> SNNConfig:
+    """2-layer fully connected SNN (LIF) for MNIST-class images."""
+    return SNNConfig(
+        name="2layer-snn",
+        input_shape=(28, 28, 1),
+        layers=(SNNLayerSpec("fc", out_features=n_hidden),),
+        neuron="lif", rule=rule, inhibition=0.1, gain=1.2, **kw)
+
+
+def fmnist_dcsnn(rule: str = "itp", **kw) -> SNNConfig:
+    """6-layer deep convolutional SNN (Izhikevich) for Fashion-MNIST-class
+    images: conv-pool-conv-pool-fc-readout (readout is external)."""
+    return SNNConfig(
+        name="6layer-dcsnn",
+        input_shape=(28, 28, 1),
+        layers=(
+            SNNLayerSpec("conv2d", out_features=12, kernel=5),
+            SNNLayerSpec("pool2d", pool=2),
+            SNNLayerSpec("conv2d", out_features=24, kernel=3),
+            SNNLayerSpec("pool2d", pool=2),
+            SNNLayerSpec("fc", out_features=128),
+        ),
+        neuron="izhikevich", rule=rule, gain=1.2,
+        izhi=IzhikevichParams(dt=0.5), **kw)
+
+
+def fault_csnn(rule: str = "itp", length: int = 512, channels: int = 2,
+               **kw) -> SNNConfig:
+    """5-layer 1-D convolutional SNN (LIF) for motor-fault time series."""
+    return SNNConfig(
+        name="5layer-csnn",
+        input_shape=(length, channels),
+        layers=(
+            SNNLayerSpec("conv1d", out_features=8, kernel=7, stride=2),
+            SNNLayerSpec("pool1d", pool=2),
+            SNNLayerSpec("conv1d", out_features=16, kernel=5, stride=2),
+            SNNLayerSpec("pool1d", pool=2),
+            SNNLayerSpec("fc", out_features=64),
+        ),
+        neuron="lif", rule=rule, gain=1.2,
+        lif=LIFParams(tau=2.0, v_th=0.8), **kw)
+
+
+PAPER_NETWORKS = {
+    "2layer-snn": mnist_2layer,
+    "6layer-dcsnn": fmnist_dcsnn,
+    "5layer-csnn": fault_csnn,
+}
+
+
+# ---------------------------------------------------------------------------
+# Layer shape inference
+# ---------------------------------------------------------------------------
+
+def _layer_shapes(cfg: SNNConfig) -> list[tuple]:
+    """Output feature shape after each layer (excluding batch)."""
+    shape = tuple(cfg.input_shape)
+    out = []
+    for spec in cfg.layers:
+        if spec.kind == "fc":
+            shape = (spec.out_features,)
+        elif spec.kind == "conv2d":
+            h, w, _ = shape
+            ho = (h - spec.kernel) // spec.stride + 1
+            wo = (w - spec.kernel) // spec.stride + 1
+            shape = (ho, wo, spec.out_features)
+        elif spec.kind == "conv1d":
+            l, _ = shape
+            lo = (l - spec.kernel) // spec.stride + 1
+            shape = (lo, spec.out_features)
+        elif spec.kind == "pool2d":
+            h, w, c = shape
+            shape = (h // spec.pool, w // spec.pool, c)
+        elif spec.kind == "pool1d":
+            l, c = shape
+            shape = (l // spec.pool, c)
+        else:
+            raise ValueError(spec.kind)
+        out.append(shape)
+    return out
+
+
+def feature_size(cfg: SNNConfig) -> int:
+    last = _layer_shapes(cfg)[-1]
+    n = 1
+    for d in last:
+        n *= d
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+class LayerState(NamedTuple):
+    neurons: Any                 # LIFState | IzhikevichState | None (pool)
+    pre_hist: SpikeHistory | None
+    post_hist: SpikeHistory | None
+
+
+class SNNState(NamedTuple):
+    weights: tuple               # per learnable layer: (fan_in, out) f32
+    layers: tuple                # per layer: LayerState
+
+
+def _neuron_init(cfg: SNNConfig, shape) -> Any:
+    if cfg.neuron == "izhikevich":
+        return izhikevich_init(shape, cfg.izhi)
+    return lif_init(shape, cfg.lif)
+
+
+def _fan_in(spec: SNNLayerSpec, in_shape: tuple) -> int:
+    if spec.kind == "fc":
+        n = 1
+        for d in in_shape:
+            n *= d
+        return n
+    if spec.kind == "conv2d":
+        return spec.kernel * spec.kernel * in_shape[-1]
+    if spec.kind == "conv1d":
+        return spec.kernel * in_shape[-1]
+    return 0
+
+
+def init_snn(key: jax.Array, cfg: SNNConfig, batch: int) -> SNNState:
+    shapes = _layer_shapes(cfg)
+    weights, states = [], []
+    in_shape = tuple(cfg.input_shape)
+    for spec, out_shape in zip(cfg.layers, shapes):
+        if spec.kind.startswith("pool"):
+            states.append(LayerState(None, None, None))
+        else:
+            key, sub = jax.random.split(key)
+            fi = _fan_in(spec, in_shape)
+            w = jax.random.uniform(sub, (fi, spec.out_features),
+                                   minval=0.2, maxval=0.8)
+            weights.append(w.astype(jnp.float32))
+            n_pre = batch * int(jnp.prod(jnp.asarray(in_shape)))
+            n_post = batch * int(jnp.prod(jnp.asarray(out_shape)))
+            states.append(LayerState(
+                neurons=_neuron_init(cfg, (batch,) + out_shape),
+                pre_hist=init_history(n_pre, cfg.depth),
+                post_hist=init_history(n_post, cfg.depth),
+            ))
+        in_shape = out_shape
+    return SNNState(weights=tuple(weights), layers=tuple(states))
+
+
+# ---------------------------------------------------------------------------
+# STDP magnitude readout from histories (shared by fc and conv paths)
+# ---------------------------------------------------------------------------
+
+def _hist_magnitude(hist: SpikeHistory, shape: tuple, amplitude: float,
+                    tau: float, cfg: SNNConfig) -> jax.Array:
+    """Per-neuron Δw magnitude read from the history register (Figs. 2-3).
+
+    Returns (B, *shape) f32; nearest-neighbour keeps only the MSB spike,
+    all-to-all reads the full fixed-point word.
+    """
+    reg = as_register(hist).astype(jnp.float32)       # (N, depth)
+    if cfg.pairing == "nearest":
+        reg = reg * (jnp.cumsum(reg, axis=-1) == 1.0)
+    w = po2_weights(cfg.depth, tau, compensate=cfg.compensate)
+    return (amplitude * reg @ w).reshape(shape)
+
+
+def _quantise(w: jax.Array, cfg: SNNConfig) -> jax.Array:
+    if not cfg.quantise:
+        return w
+    levels = (1 << (cfg.w_bits - 1)) - 1
+    return jnp.round(w * levels) / levels
+
+
+# ---------------------------------------------------------------------------
+# Layer steps
+# ---------------------------------------------------------------------------
+
+def _patches2d(x: jax.Array, k: int, stride: int) -> jax.Array:
+    """(B,H,W,C) → (B,Ho,Wo,k·k·C) im2col patches."""
+    B, H, W, C = x.shape
+    p = jax.lax.conv_general_dilated_patches(
+        x.transpose(0, 3, 1, 2), (k, k), (stride, stride), "VALID")
+    # p: (B, C*k*k, Ho, Wo) with feature order (C, kh, kw)
+    Ho, Wo = p.shape[2], p.shape[3]
+    p = p.reshape(B, C, k * k, Ho, Wo).transpose(0, 3, 4, 2, 1)
+    return p.reshape(B, Ho, Wo, k * k * C)
+
+
+def _patches1d(x: jax.Array, k: int, stride: int) -> jax.Array:
+    """(B,L,C) → (B,Lo,k·C)."""
+    B, L, C = x.shape
+    p = jax.lax.conv_general_dilated_patches(
+        x.transpose(0, 2, 1)[..., None], (k, 1), (stride, 1), "VALID")
+    Lo = p.shape[2]
+    p = p.reshape(B, C, k, Lo).transpose(0, 3, 2, 1)
+    return p.reshape(B, Lo, k * C)
+
+
+def _learnable_step(spec: SNNLayerSpec, cfg: SNNConfig, w: jax.Array,
+                    st: LayerState, spikes_in: jax.Array,
+                    train: bool) -> tuple[jax.Array, LayerState, jax.Array]:
+    """One step of an fc/conv STDP layer.
+
+    spikes_in: (B, *in_shape) {0,1}.  Returns (w', state', spikes_out).
+    """
+    B = spikes_in.shape[0]
+    s_in = spikes_in.astype(jnp.float32)
+
+    # --- patches + synaptic accumulation --------------------------------
+    if spec.kind == "fc":
+        patches = s_in.reshape(B, 1, -1)                   # (B, P=1, fan_in)
+    elif spec.kind == "conv2d":
+        p = _patches2d(s_in, spec.kernel, spec.stride)     # (B,Ho,Wo,K)
+        patches = p.reshape(B, -1, p.shape[-1])
+        out_hw = p.shape[1:3]
+    else:                                                   # conv1d
+        p = _patches1d(s_in, spec.kernel, spec.stride)
+        patches = p.reshape(B, -1, p.shape[-1])
+        out_l = p.shape[1]
+    # activity-normalised accumulation: scale by the *population mean*
+    # active-synapse count (a per-step scalar), which keeps the layer's
+    # operating point invariant to width/sparsity (synaptic-scaling
+    # homeostasis) while preserving within-step selectivity — patches
+    # with stronger weighted input still drive proportionally more
+    # current, unlike a per-patch normaliser which flattens selectivity
+    act_mean = jnp.mean(jnp.sum(patches, axis=-1))          # scalar
+    i_in = cfg.gain * jnp.einsum("bpk,kc->bpc", patches, w) \
+        / jnp.maximum(act_mean, 1.0)
+
+    # --- lateral inhibition (2-layer SNN soft WTA) -----------------------
+    if cfg.inhibition > 0.0 and st.post_hist is not None:
+        prev = as_register(st.post_hist)[:, 0].reshape(i_in.shape[0], -1)
+        prev = prev.reshape(i_in.shape)
+        total = jnp.sum(prev, axis=-1, keepdims=True)
+        i_in = i_in - cfg.inhibition * (total - prev)
+
+    # --- neuron dynamics --------------------------------------------------
+    if spec.kind == "fc":
+        out_shape = (B, w.shape[1])
+    elif spec.kind == "conv2d":
+        out_shape = (B,) + out_hw + (w.shape[1],)
+    else:
+        out_shape = (B, out_l, w.shape[1])
+    i_flat = i_in.reshape(out_shape)
+    if cfg.neuron == "izhikevich":
+        neurons, spikes_out = izhikevich_step(st.neurons, cfg.izhi_gain * i_flat,
+                                              cfg.izhi)
+    else:
+        neurons, spikes_out = lif_step(st.neurons, i_flat, cfg.lif)
+    s_out = spikes_out.astype(jnp.float32)
+
+    # --- ITP-STDP update --------------------------------------------------
+    if train:
+        ltp = _hist_magnitude(st.pre_hist, spikes_in.shape, cfg.stdp.a_plus,
+                              cfg.stdp.tau_plus, cfg)      # (B,*in)
+        ltd = _hist_magnitude(st.post_hist, out_shape, cfg.stdp.a_minus,
+                              cfg.stdp.tau_minus, cfg)     # (B,*out)
+        if spec.kind == "fc":
+            ltp_p = ltp.reshape(B, 1, -1)
+            pre_p = patches
+        elif spec.kind == "conv2d":
+            ltp_p = _patches2d(ltp, spec.kernel, spec.stride).reshape(
+                B, -1, patches.shape[-1])
+            pre_p = patches
+        else:
+            ltp_p = _patches1d(ltp, spec.kernel, spec.stride).reshape(
+                B, -1, patches.shape[-1])
+            pre_p = patches
+        post_s = s_out.reshape(B, -1, w.shape[1])          # (B,P,out)
+        ltd_m = ltd.reshape(B, -1, w.shape[1])
+        # pair gate (§V-A): potentiate where post fired alone, depress where
+        # pre fired alone — per (patch element, output neuron) synapse
+        dw_ltp = jnp.einsum("bpk,bpc->kc", (1.0 - pre_p) * ltp_p, post_s)
+        dw_ltd = jnp.einsum("bpk,bpc->kc", pre_p, (1.0 - post_s) * ltd_m)
+        denom = float(B * patches.shape[1])
+        w = jnp.clip(w + cfg.eta * (dw_ltp - dw_ltd) / denom, 0.0, 1.0)
+        w = _quantise(w, cfg)
+
+    # --- shift-in new spikes ----------------------------------------------
+    st = LayerState(
+        neurons=neurons,
+        pre_hist=push(st.pre_hist, s_in.reshape(-1)),
+        post_hist=push(st.post_hist, s_out.reshape(-1)),
+    )
+    return w, st, spikes_out
+
+
+def _pool_step(spec: SNNLayerSpec, spikes_in: jax.Array) -> jax.Array:
+    """Spike OR-pooling (any spike in the window fires the pooled unit)."""
+    s = spikes_in.astype(jnp.float32)
+    if spec.kind == "pool2d":
+        B, H, W, C = s.shape
+        p = spec.pool
+        s = s[:, :H // p * p, :W // p * p]
+        s = s.reshape(B, H // p, p, W // p, p, C).max(axis=(2, 4))
+    else:
+        B, L, C = s.shape
+        p = spec.pool
+        s = s[:, :L // p * p]
+        s = s.reshape(B, L // p, p, C).max(axis=2)
+    return s > 0.5
+
+
+# ---------------------------------------------------------------------------
+# Network step / run
+# ---------------------------------------------------------------------------
+
+def snn_step(state: SNNState, spikes_in: jax.Array, cfg: SNNConfig,
+             *, train: bool = True) -> tuple[SNNState, jax.Array]:
+    """One simulation step through the whole stack; returns last-layer spikes."""
+    new_w, new_l = [], []
+    wi = 0
+    s = spikes_in
+    for spec, lst in zip(cfg.layers, state.layers):
+        if spec.kind.startswith("pool"):
+            s = _pool_step(spec, s)
+            new_l.append(lst)
+        else:
+            w, lst2, s = _learnable_step(spec, cfg, state.weights[wi], lst, s,
+                                         train)
+            new_w.append(w)
+            new_l.append(lst2)
+            wi += 1
+    return SNNState(weights=tuple(new_w), layers=tuple(new_l)), s
+
+
+@partial(jax.jit, static_argnames=("cfg", "train"))
+def run_snn(state: SNNState, raster: jax.Array, cfg: SNNConfig,
+            *, train: bool = True) -> tuple[SNNState, jax.Array]:
+    """Scan over a (T, B, *input_shape) raster.
+
+    Returns (state', spike counts of the last layer (B, feature_size)).
+    """
+    T, B = raster.shape[:2]
+    x = raster.reshape((T, B) + tuple(cfg.input_shape))
+
+    def step(st, xt):
+        st2, s_out = snn_step(st, xt, cfg, train=train)
+        return st2, s_out.reshape(B, -1).astype(jnp.float32)
+
+    state, outs = jax.lax.scan(step, state, x)
+    return state, outs.sum(axis=0)
+
+
+def reset_dynamics(state: SNNState, cfg: SNNConfig, batch: int) -> SNNState:
+    """Zero neuron states + histories between samples; keep learned weights."""
+    fresh = init_snn(jax.random.PRNGKey(0), cfg, batch)
+    return SNNState(weights=state.weights, layers=fresh.layers)
+
+
+# ---------------------------------------------------------------------------
+# Readout: ridge regression on spike counts (shared protocol, Table II)
+# ---------------------------------------------------------------------------
+
+def fit_readout(features: jax.Array, labels: jax.Array, n_classes: int,
+                l2: float = 1e-3) -> jax.Array:
+    """Closed-form ridge readout W: features (N, F) → one-hot labels."""
+    X = jnp.asarray(features, jnp.float32)
+    X = X / jnp.maximum(X.max(), 1.0)
+    X = jnp.concatenate([X, jnp.ones((X.shape[0], 1))], axis=1)
+    Y = jax.nn.one_hot(labels, n_classes)
+    A = X.T @ X + l2 * jnp.eye(X.shape[1])
+    return jnp.linalg.solve(A, X.T @ Y)
+
+
+def readout_accuracy(W: jax.Array, features: jax.Array,
+                     labels: jax.Array) -> float:
+    X = jnp.asarray(features, jnp.float32)
+    X = X / jnp.maximum(X.max(), 1.0)
+    X = jnp.concatenate([X, jnp.ones((X.shape[0], 1))], axis=1)
+    pred = jnp.argmax(X @ W, axis=-1)
+    return float(jnp.mean(pred == labels))

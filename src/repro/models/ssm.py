@@ -1,0 +1,208 @@
+"""Mamba2 mixer with SSD (state-space duality) — arXiv:2405.21060.
+
+Training/prefill uses the chunked dual form: within a chunk the model is a
+masked-attention-like quadratic einsum (MXU work), across chunks a linear
+recurrence over the per-chunk summarised states (a `lax.scan` carrying the
+(heads, d_state, head_dim) state).  One scan pass produces both the
+intra-chunk (diagonal-block) and inter-chunk (low-rank) contributions, so
+nothing is recomputed.
+
+Group handling keeps the (groups, heads-per-group) factorisation inside the
+einsums — B/C are never materialised per-head (mamba2-1.3b has 1 group
+feeding 64 heads; broadcasting would cost 64× the B/C bytes).
+
+Decode is the O(1) recurrent form: S' = exp(AΔ)·S + Δ·B⊗x, y = C·S' + D·x.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import Params, dense_init, pdtype
+
+
+def ssm_dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    heads = di // cfg.ssm_head_dim
+    g = cfg.ssm_groups
+    conv_dim = di + 2 * g * cfg.ssm_state
+    return di, heads, g, conv_dim
+
+
+def init_ssm(key, cfg) -> Params:
+    di, heads, g, conv_dim = ssm_dims(cfg)
+    n = cfg.ssm_state
+    dt_p = pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    # z / xBC / dt projections are separate matrices so each output dim is
+    # independently TP-shardable (slicing a sharded fused dim would force
+    # GSPMD reshards at every layer)
+    p = {
+        "wz": dense_init(ks[3], cfg.d_model, di, dt_p),
+        "wxbc": dense_init(ks[0], cfg.d_model, conv_dim, dt_p),
+        "wdt": dense_init(ks[4], cfg.d_model, heads, dt_p),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, conv_dim)) * 0.1
+                   ).astype(dt_p),
+        "conv_b": jnp.zeros((conv_dim,), dt_p),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(dt_p),
+        "d_skip": jnp.ones((heads,), dt_p),
+        "dt_bias": jnp.zeros((heads,), dt_p),
+        "norm_scale": jnp.ones((di,), dt_p),
+        "out_proj": dense_init(ks[2], di, cfg.d_model, dt_p),
+    }
+    return p
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # (B, d_conv-1, conv_dim)
+    state: jax.Array   # (B, g, r, N, P) — r = heads per group
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32) -> SSMCache:
+    di, heads, g, conv_dim = ssm_dims(cfg)
+    r = heads // g
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, g, r, cfg.ssm_state, cfg.ssm_head_dim), dtype),
+    )
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                   eps: float) -> jax.Array:
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _split_proj(p: Params, u: jax.Array, cfg):
+    z = constrain(u @ p["wz"].astype(u.dtype), ("batch", None, "tp"))
+    xbc = constrain(u @ p["wxbc"].astype(u.dtype), ("batch", None, "tp"))
+    dt = u @ p["wdt"].astype(u.dtype)
+    return z, xbc, dt
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b_in: jax.Array,
+             c_in: jax.Array, chunk: int, s0: jax.Array | None = None
+             ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x:  (B, L, g, r, P) inputs per head
+    dt: (B, L, g, r)    positive step sizes
+    a:  (g, r)          negative decay rates
+    b_in/c_in: (B, L, g, N)
+    Returns (y (B,L,g,r,P), final state (B,g,r,N,P)).
+    """
+    B, L, g, r, P = x.shape
+    N = b_in.shape[-1]
+    nc = L // chunk
+    if L % chunk:
+        raise ValueError(f"chunk {chunk} must divide L={L}")
+
+    xc = x.reshape(B, nc, chunk, g, r, P).swapaxes(0, 1)
+    dtc = dt.reshape(B, nc, chunk, g, r).swapaxes(0, 1)
+    bc = b_in.reshape(B, nc, chunk, g, N).swapaxes(0, 1)
+    cc = c_in.reshape(B, nc, chunk, g, N).swapaxes(0, 1)
+
+    if s0 is None:
+        s0 = jnp.zeros((B, g, r, N, P), jnp.float32)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :]).astype(jnp.float32)
+
+    def step(S, inp):
+        x_k, dt_k, b_k, c_k = inp                     # chunk-local tensors
+        a_bar = dt_k.astype(jnp.float32) * a          # (B,Lc,g,r) ≤ 0
+        a_cum = jnp.cumsum(a_bar, axis=1)
+        a_sum = a_cum[:, -1]                          # (B,g,r)
+        xb = (x_k * dt_k[..., None]).astype(jnp.float32)
+
+        # intra-chunk quadratic (diagonal block); mask in log space so the
+        # anti-causal half never evaluates exp(+large) (inf·0 = NaN)
+        seg = a_cum[:, :, None] - a_cum[:, None]       # (B,i,j,g,r)
+        seg = jnp.where(causal[None, :, :, None, None] > 0, seg, -jnp.inf)
+        l_mat = jnp.exp(seg)
+        cb = jnp.einsum("bign,bjgn->bijg", c_k.astype(jnp.float32),
+                        b_k.astype(jnp.float32))
+        y = jnp.einsum("bijg,bijgr,bjgrp->bigrp", cb, l_mat, xb)
+
+        # inter-chunk contribution from the carried state
+        y = y + jnp.einsum("bign,bgrnp,bigr->bigrp",
+                           c_k.astype(jnp.float32), S, jnp.exp(a_cum))
+
+        # state update for the next chunk
+        decay = jnp.exp(a_sum[:, None] - a_cum)       # (B,j,g,r)
+        s_new = S * jnp.exp(a_sum)[..., None, None] \
+            + jnp.einsum("bjgn,bjgr,bjgrp->bgrnp", b_k.astype(jnp.float32),
+                         decay, xb)
+        return s_new, y.astype(x.dtype)
+
+    s_fin, ys = jax.lax.scan(step, s0, (xc, dtc, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(B, L, g, r, P)
+    return y, s_fin
+
+
+def apply_ssm_train(p: Params, u: jax.Array, cfg) -> jax.Array:
+    """Full-sequence mixer (training/prefill).  u: (B, L, d_model)."""
+    di, heads, g, conv_dim = ssm_dims(cfg)
+    n, P = cfg.ssm_state, cfg.ssm_head_dim
+    r = heads // g
+    B, L, _ = u.shape
+    z, xbc, dt_raw = _split_proj(p, u, cfg)
+
+    # causal depthwise conv (width d_conv) + silu
+    w = p["conv_w"].astype(xbc.dtype)                 # (d_conv, conv_dim)
+    xp = jnp.pad(xbc, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+    conv = sum(xp[:, i:i + L] * w[i] for i in range(cfg.d_conv))
+    xbc = jax.nn.silu(conv + p["conv_b"].astype(xbc.dtype))
+
+    x = xbc[..., :di].reshape(B, L, g, r, P)
+    b_in = xbc[..., di:di + g * n].reshape(B, L, g, n)
+    c_in = xbc[..., di + g * n:].reshape(B, L, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    dt = dt.reshape(B, L, g, r)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32)).reshape(g, r)
+
+    y, _ = ssd_scan(x, dt, a, b_in, c_in, cfg.ssd_chunk)
+    y = y + p["d_skip"].astype(y.dtype).reshape(g, r)[None, None, :, :, None] * x
+    y = y.reshape(B, L, di)
+    y = _gated_rmsnorm(y, z, p["norm_scale"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(u.dtype)
+
+
+def apply_ssm_decode(p: Params, u: jax.Array, cache: SSMCache, cfg
+                     ) -> tuple[jax.Array, SSMCache]:
+    """Single-token recurrent step.  u: (B, 1, d_model)."""
+    di, heads, g, conv_dim = ssm_dims(cfg)
+    n, P = cfg.ssm_state, cfg.ssm_head_dim
+    r = heads // g
+    B = u.shape[0]
+    z, xbc_new, dt_raw = _split_proj(p, u, cfg)       # (B,1,·)
+
+    # conv ring: window = [conv_state, x_new]; cache stays f32, compute in
+    # the activation dtype so the decode carry dtype is stable under scan
+    win = jnp.concatenate([cache.conv.astype(xbc_new.dtype), xbc_new], axis=1)
+    w = p["conv_w"].astype(win.dtype)                 # (B,d_conv,·)
+    conv = jnp.einsum("bkc,kc->bc", win, w) + p["conv_b"].astype(win.dtype)
+    xbc = jax.nn.silu(conv)[:, None, :]               # (B,1,conv_dim)
+    conv_cache = win[:, 1:].astype(cache.conv.dtype)
+
+    x = xbc[..., :di].reshape(B, g, r, P)
+    b_in = xbc[..., di:di + g * n].reshape(B, g, n)
+    c_in = xbc[..., di + g * n:].reshape(B, g, n)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32)).reshape(B, g, r)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32)).reshape(g, r)
+
+    decay = jnp.exp(dt * a)                           # (B,g,r)
+    xb = (x * dt[..., None]).astype(jnp.float32)
+    state = cache.state * decay[..., None, None] \
+        + jnp.einsum("bgn,bgrp->bgrnp", b_in.astype(jnp.float32), xb)
+    y = jnp.einsum("bgn,bgrnp->bgrp", c_in.astype(jnp.float32), state)
+    y = y.astype(u.dtype) + p["d_skip"].astype(u.dtype).reshape(g, r)[None, :, :, None] * x
+    y = y.reshape(B, 1, di)
+    y = _gated_rmsnorm(y, z, p["norm_scale"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(u.dtype), SSMCache(conv=conv_cache,
+                                                       state=state)

@@ -1,0 +1,2 @@
+from repro.serve.serving import (Request, ServeConfig, Server, init_cache,
+                                 make_serve_step, prefill, sample)

@@ -1,0 +1,164 @@
+"""Serving: one-token decode steps, chunked prefill, and a batched
+continuous-batching server loop.
+
+``make_serve_step`` builds the jitted decode step that the decode_32k /
+long_500k dry-run cells lower: one new token for every sequence in the
+batch against a seq_len-deep KV/SSM cache.  ``Server`` is a minimal
+continuous-batching engine over it (slot-based, greedy or temperature
+sampling) used by the serving example.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_tokens: int                  # KV-cache depth (context length)
+    batch: int
+    kv_dtype: str = "bfloat16"       # bfloat16 | int8
+    temperature: float = 0.0         # 0 → greedy
+    unroll: bool = False             # unroll layer scans (measurement only)
+
+
+def make_serve_step(cfg, serve_cfg: ServeConfig) -> Callable:
+    """Returns ``step(params, cache, tokens (B,1), pos) → (logits, cache')``."""
+
+    def step(params: Params, cache: transformer.DecodeCache,
+             tokens: jax.Array, pos: jax.Array,
+             vis_embed: jax.Array | None = None):
+        kw = {"vis_embed": vis_embed} if vis_embed is not None else {}
+        return transformer.decode_step(params, cfg, cache, pos,
+                                       tokens=tokens,
+                                       unroll=serve_cfg.unroll, **kw)
+
+    return step
+
+
+def init_cache(cfg, serve_cfg: ServeConfig) -> transformer.DecodeCache:
+    dt = jnp.int8 if serve_cfg.kv_dtype == "int8" else jnp.bfloat16
+    return transformer.init_decode_cache(cfg, serve_cfg.batch,
+                                         serve_cfg.max_tokens, kv_dtype=dt)
+
+
+def prefill(params: Params, cfg, cache: transformer.DecodeCache,
+            tokens: jax.Array, serve_step: Callable,
+            vis_embed: jax.Array | None = None
+            ) -> tuple[jax.Array, transformer.DecodeCache]:
+    """Sequential prefill through the decode path (small-scale serving).
+
+    Production prefill runs the batched forward; the decode-path loop keeps
+    this example-scale implementation cache-exact for every family
+    (KV, ring-SWA, SSM state) with no second code path to validate.
+    """
+    B, S = tokens.shape
+
+    def body(carry, t):
+        cache, _ = carry
+        logits, cache = serve_step(params, cache, tokens[:, t][:, None],
+                                   jnp.asarray(t),
+                                   *([vis_embed] if vis_embed is not None else []))
+        return (cache, logits), None
+
+    (cache, logits), _ = jax.lax.scan(
+        body, (cache, jnp.zeros((B, 1, cfg.vocab_size),
+                                jnp.dtype(cfg.dtype))),
+        jnp.arange(S))
+    return logits, cache
+
+
+def sample(key: jax.Array, logits: jax.Array, temperature: float) -> jax.Array:
+    """(B,1,V) → (B,) next tokens."""
+    logits = logits[:, -1].astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list            # token ids
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    """Slot-based continuous batching over the jitted decode step.
+
+    Each of ``batch`` slots holds one request; finished slots are refilled
+    from the queue without stopping the others (their pad-token steps are
+    masked out).  This is the serving analogue of the learning engine's
+    time-multiplexed neuron pipeline (§V-B) — one compiled step serves many
+    logical streams.
+    """
+
+    def __init__(self, params: Params, cfg, serve_cfg: ServeConfig,
+                 seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = serve_cfg
+        self.step_fn = jax.jit(make_serve_step(cfg, serve_cfg))
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: list[Request] = []
+        self.slots: list[Request | None] = [None] * serve_cfg.batch
+        self.slot_pos = jnp.zeros((serve_cfg.batch,), jnp.int32)
+        self.cache = init_cache(cfg, serve_cfg)
+        self.completed: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # per-slot prefill: feed prompt tokens one at a time
+                pos = 0
+                for t in req.prompt:
+                    tok = jnp.full((self.scfg.batch, 1), 0, jnp.int32)
+                    tok = tok.at[i, 0].set(t)
+                    logits, self.cache = self.step_fn(
+                        self.params, self.cache, tok, jnp.asarray(pos))
+                    pos += 1
+                self.slot_pos = self.slot_pos.at[i].set(pos)
+                req._last_logits = logits[i]
+
+    def run(self, max_steps: int = 256) -> list[Request]:
+        """Drive all queued requests to completion (or max_steps)."""
+        for _ in range(max_steps):
+            self._admit()
+            if all(s is None for s in self.slots):
+                break
+            toks = jnp.zeros((self.scfg.batch, 1), jnp.int32)
+            for i, req in enumerate(self.slots):
+                if req is not None:
+                    logits = getattr(req, "_last_logits")
+                    self.key, sub = jax.random.split(self.key)
+                    nxt = sample(sub, logits[None], self.scfg.temperature)
+                    req.out.append(int(nxt[0]))
+                    toks = toks.at[i, 0].set(nxt[0])
+            pos = int(jnp.max(self.slot_pos))
+            logits, self.cache = self.step_fn(self.params, self.cache, toks,
+                                              jnp.asarray(pos))
+            self.slot_pos = self.slot_pos + jnp.asarray(
+                [1 if s is not None else 0 for s in self.slots], jnp.int32)
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                req._last_logits = logits[i]
+                if len(req.out) >= req.max_new:
+                    req.done = True
+                    self.completed.append(req)
+                    self.slots[i] = None
+        return self.completed

@@ -1,0 +1,4 @@
+from repro.train.optimizer import (OptimizerConfig, OptState, adamw_update,
+                                   init_opt_state, lr_schedule)
+from repro.train.train_step import (TrainConfig, init_training, lm_loss,
+                                    make_train_step, batch_shardings)

@@ -1,0 +1,160 @@
+"""LM training step: loss, gradients, optimizer — pjit/GSPMD-distributed.
+
+The step is a pure function ``(params, opt_state, batch) → (params',
+opt_state', metrics)``; ``make_train_step`` closes over the model/optimizer
+configs and (optionally) a mesh, returning the jitted step together with
+the in/out shardings the launcher and the dry-run both use.
+
+Cross-pod handling (multi-pod mesh): gradients are computed from the
+pod-local batch shard inside a ``shard_map`` manual only over ``pod``,
+then exchanged with the po2-compressed all-gather
+(``distributed.compression``) — the paper's sign·2^e format on the slow
+inter-pod links.  ``pod_compression=False`` falls back to a plain f32
+``pmean`` (the ablation baseline); single-pod meshes skip the block
+entirely and GSPMD reduces over ``data`` as usual.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import compression
+from repro.distributed.sharding import (batch_axes, param_shardings,
+                                        use_mesh)
+from repro.models import transformer
+from repro.train.optimizer import (OptimizerConfig, OptState, adamw_update,
+                                   init_opt_state)
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    remat: str = "full"              # none | full | dots
+    z_loss: float = 1e-4
+    pod_compression: bool = True     # po2 wire format across the pod axis
+    unroll: bool = False             # unroll layer scans (measurement only)
+    sharding_profile: str = "fsdp"   # fsdp | replicated (weights over data)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params: Params, cfg, batch: dict, *, train_cfg: TrainConfig,
+            vis_embed: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """Next-token cross entropy (+ z-loss, + MoE aux) over a token batch.
+
+    ``batch['labels'] == -1`` marks ignored positions.  Softmax statistics
+    accumulate in f32 while logits stay in the compute dtype, which keeps
+    the (B, S, V) intermediate at bf16 — the difference between fitting
+    and OOM at vocab 152k.
+    """
+    kw = {}
+    if cfg.family == "vlm":
+        kw["vis_embed"] = vis_embed if vis_embed is not None \
+            else batch.get("vis_embed")
+    if "embeds" in batch:
+        logits, aux = transformer.forward(params, cfg, embeds=batch["embeds"],
+                                          remat=train_cfg.remat,
+                                          unroll=train_cfg.unroll, **kw)
+    else:
+        logits, aux = transformer.forward(params, cfg, tokens=batch["tokens"],
+                                          remat=train_cfg.remat,
+                                          unroll=train_cfg.unroll, **kw)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = lse - gold.astype(jnp.float32)
+    n_tok = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll * mask) / n_tok
+    zl = train_cfg.z_loss * jnp.sum((lse ** 2) * mask) / n_tok
+    loss = ce + zl + aux.get("moe_aux", 0.0) + aux.get("moe_z", 0.0)
+    metrics = {"loss": loss, "ce": ce, "z_loss": zl,
+               "moe_aux": aux.get("moe_aux", jnp.zeros(())),
+               "tokens": n_tok}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Step factory
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh: Mesh, batch_tree: dict) -> dict:
+    """Batch arrays shard their leading dim over ('pod','data')."""
+    ax = batch_axes(mesh)
+    def one(x):
+        return NamedSharding(mesh, P(ax, *([None] * (x.ndim - 1))))
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def make_train_step(cfg, opt_cfg: OptimizerConfig,
+                    train_cfg: TrainConfig = TrainConfig(),
+                    mesh: Mesh | None = None
+                    ) -> Callable[[Params, OptState, dict], tuple]:
+    """Build the (optionally distributed) train step.
+
+    Without a mesh: plain jit for CPU tests.  With a mesh: the caller is
+    expected to run under ``use_mesh(mesh)`` / pass sharded inputs; the
+    returned function is jit-compiled with GSPMD handling data/model axes
+    and the explicit pod block handling the slow axis.
+    """
+    multi_pod = mesh is not None and "pod" in mesh.axis_names
+
+    def grads_and_metrics(params, batch):
+        return jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch, train_cfg=train_cfg),
+            has_aux=True)(params)
+
+    def step(params: Params, opt_state: OptState, batch: dict):
+        if multi_pod:
+            # pod-local grads (GSPMD shards data/model inside the manual-
+            # over-pod region), then the explicit compressed exchange; the
+            # post-mean grads/metrics are genuinely pod-replicated, so
+            # out_specs=P() is truthful
+            def local(p, b):
+                (loss, metrics), grads = grads_and_metrics(p, b)
+                grads = compression.pod_mean_tree(
+                    grads, compress=train_cfg.pod_compression)
+                metrics = jax.tree_util.tree_map(
+                    lambda x: jax.lax.pmean(x, "pod"), metrics)
+                return grads, metrics
+
+            grads, metrics = jax.shard_map(
+                local, mesh=mesh,
+                in_specs=(P(), P("pod")), out_specs=P(),
+                axis_names={"pod"}, check_vma=False)(params, batch)
+        else:
+            (loss, metrics), grads = grads_and_metrics(params, batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def init_training(key: jax.Array, cfg, opt_cfg: OptimizerConfig,
+                  mesh: Mesh | None = None):
+    """Initialise (params, opt_state); sharded when a mesh is given."""
+    if mesh is None:
+        params = transformer.init_model(key, cfg)
+        return params, init_opt_state(params)
+    with use_mesh(mesh):
+        shape_tree = jax.eval_shape(lambda k: transformer.init_model(k, cfg),
+                                    key)
+        shardings = param_shardings(cfg, shape_tree, mesh)
+        params = jax.jit(lambda k: transformer.init_model(k, cfg),
+                         out_shardings=shardings)(key)
+        opt_shardings = OptState(
+            step=NamedSharding(mesh, P()), mu=shardings, nu=shardings)
+        opt_state = jax.jit(init_opt_state,
+                            out_shardings=opt_shardings)(params)
+    return params, opt_state

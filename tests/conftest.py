@@ -1,0 +1,13 @@
+"""Shared fixtures.  Tests run on the single CPU device — the 512-device
+override lives ONLY in repro.launch.dryrun (never set globally here)."""
+import jax
+import pytest
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

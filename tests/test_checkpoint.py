@@ -1,0 +1,154 @@
+"""Checkpointing + fault tolerance: integrity, atomicity, deterministic
+restart, straggler watchdog."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, latest_checkpoint,
+                              list_checkpoints, prune_checkpoints,
+                              restore_checkpoint, save_checkpoint)
+from repro.distributed.fault_tolerance import (FailureInjector, RunnerConfig,
+                                               TrainingRunner, Watchdog)
+
+
+def _tree(key):
+    return {"w": jax.random.normal(key, (8, 8)),
+            "opt": {"mu": jnp.zeros((8, 8)), "step": jnp.asarray(3)}}
+
+
+def test_save_restore_roundtrip(key, tmp_path):
+    t = _tree(key)
+    save_checkpoint(str(tmp_path), 7, t)
+    r = restore_checkpoint(str(tmp_path), 7, jax.tree_util.tree_map(
+        jnp.zeros_like, t))
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checksum_detects_corruption(key, tmp_path):
+    t = _tree(key)
+    path = save_checkpoint(str(tmp_path), 1, t)
+    victim = os.path.join(path, "w.npy")
+    arr = np.load(victim)
+    arr[0, 0] += 1.0
+    np.save(victim, arr)
+    with pytest.raises(IOError, match="checksum"):
+        restore_checkpoint(str(tmp_path), 1,
+                           jax.tree_util.tree_map(jnp.zeros_like, t))
+
+
+def test_latest_and_prune(key, tmp_path):
+    t = _tree(key)
+    for s in (1, 5, 9, 12):
+        save_checkpoint(str(tmp_path), s, t)
+    assert latest_checkpoint(str(tmp_path)) == 12
+    prune_checkpoints(str(tmp_path), keep=2)
+    assert list_checkpoints(str(tmp_path)) == [9, 12]
+
+
+def test_partial_write_ignored(key, tmp_path):
+    t = _tree(key)
+    save_checkpoint(str(tmp_path), 3, t)
+    # simulate a crash mid-save: tmp dir without manifest
+    os.makedirs(str(tmp_path / "step_000000009.tmp"))
+    # and a committed-looking dir without manifest
+    os.makedirs(str(tmp_path / "step_000000010"))
+    assert latest_checkpoint(str(tmp_path)) == 3
+
+
+def test_async_checkpointer(key, tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    t = _tree(key)
+    for s in (2, 4, 6):
+        ck.save(s, t)
+    ck.wait()
+    assert latest_checkpoint(str(tmp_path)) == 6
+    assert len(list_checkpoints(str(tmp_path))) <= 2
+
+
+# ---------------------------------------------------------------------------
+# Watchdog
+# ---------------------------------------------------------------------------
+
+def test_watchdog_flags_straggler():
+    times = iter([float(i) for i in range(100)])
+    now = [0.0]
+
+    def clock():
+        return now[0]
+
+    wd = Watchdog(threshold=3.0, clock=clock)
+    for step in range(12):
+        wd.start()
+        now[0] += 1.0          # normal step: 1s
+        assert not wd.stop(step)
+    wd.start()
+    now[0] += 10.0             # straggler: 10s > 3 × median(1s)
+    assert wd.stop(12)
+    assert wd.stragglers[0][0] == 12
+
+
+# ---------------------------------------------------------------------------
+# Deterministic restart
+# ---------------------------------------------------------------------------
+
+def _counter_step(state, batch):
+    new = {"x": state["x"] + batch["v"], "n": state["n"] + 1}
+    return new, {"loss": jnp.sum(new["x"])}
+
+
+def _batch_fn(step):
+    return {"v": jnp.full((4,), float(step + 1))}
+
+
+def test_runner_restart_is_deterministic(tmp_path):
+    """Failure + restore + replay ≡ an uninterrupted run (step-keyed data)."""
+    state0 = {"x": jnp.zeros((4,)), "n": jnp.asarray(0)}
+    clean = TrainingRunner(
+        RunnerConfig(ckpt_dir=str(tmp_path / "clean"), ckpt_every=3),
+        _counter_step, _batch_fn)
+    s_clean = clean.run(state0, 10)
+
+    faulty = TrainingRunner(
+        RunnerConfig(ckpt_dir=str(tmp_path / "faulty"), ckpt_every=3),
+        _counter_step, _batch_fn)
+    s_faulty = faulty.run(state0, 10, FailureInjector({7}))
+    assert faulty.restarts == 1
+    np.testing.assert_array_equal(np.asarray(s_clean["x"]),
+                                  np.asarray(s_faulty["x"]))
+    assert int(s_faulty["n"]) == 10
+
+
+def test_runner_gives_up_after_max_restarts(tmp_path):
+    runner = TrainingRunner(
+        RunnerConfig(ckpt_dir=str(tmp_path), ckpt_every=100,
+                     max_restarts=2),
+        _counter_step, _batch_fn)
+    state0 = {"x": jnp.zeros((4,)), "n": jnp.asarray(0)}
+    injector = FailureInjector({3})
+
+    class AlwaysFail(FailureInjector):
+        def maybe_fail(self, step):
+            if step == 3:
+                raise RuntimeError("persistent failure")
+
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        runner.run(state0, 10, AlwaysFail())
+
+
+def test_manifest_schema(key, tmp_path):
+    t = _tree(key)
+    path = save_checkpoint(str(tmp_path), 2, t, extra={"mesh": "16x16"})
+    with open(os.path.join(path, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["step"] == 2
+    assert m["extra"]["mesh"] == "16x16"
+    names = {l["name"] for l in m["leaves"]}
+    assert "w" in names and any("mu" in n for n in names)
+    for leaf in m["leaves"]:
+        assert set(leaf) == {"name", "shape", "dtype", "sha256"}

@@ -1,0 +1,105 @@
+"""Synthetic data generators + the spike-encoding pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import (LMBatchSpec, Prefetcher, encode_batch, host_shard,
+                        lm_batches, spike_stream, synthetic_digits,
+                        synthetic_fashion, synthetic_fault, zipf_tokens)
+
+
+def test_digits_shapes_and_range(key):
+    x, y = synthetic_digits(key, 32)
+    assert x.shape == (32, 28, 28)
+    assert float(x.min()) >= 0.0 and float(x.max()) <= 1.0
+    assert set(np.asarray(y)) <= set(range(10))
+
+
+def test_digits_class_structure(key):
+    """Same-class images correlate more than cross-class ones."""
+    x, y = synthetic_digits(key, 200, noise=0.05, jitter=0)
+    x = np.asarray(x).reshape(200, -1)
+    y = np.asarray(y)
+    same, diff = [], []
+    for c in range(10):
+        m = x[y == c]
+        if len(m) >= 2:
+            same.append(np.corrcoef(m[0], m[1])[0, 1])
+    for c in range(5):
+        a, b = x[y == c], x[y == (c + 5) % 10]
+        if len(a) and len(b):
+            diff.append(np.corrcoef(a[0], b[0])[0, 1])
+    assert np.mean(same) > np.mean(diff) + 0.2
+
+
+def test_fashion_and_fault_shapes(key):
+    x, y = synthetic_fashion(key, 8)
+    assert x.shape == (8, 28, 28)
+    x, y = synthetic_fault(key, 8, length=256, channels=2)
+    assert x.shape == (8, 256, 2)
+    assert set(np.asarray(y)) <= set(range(4))
+
+
+def test_fault_classes_differ_spectrally(key):
+    x, y = synthetic_fault(key, 400, noise=0.02)
+    x, y = np.asarray(x), np.asarray(y)
+    # class 3 (bearing impulses) has the heaviest kurtosis
+    def kurt(v):
+        v = v - v.mean()
+        return (v ** 4).mean() / (v ** 2).mean() ** 2
+    k3 = np.mean([kurt(x[i, :, 0]) for i in np.where(y == 3)[0][:20]])
+    k0 = np.mean([kurt(x[i, :, 0]) for i in np.where(y == 0)[0][:20]])
+    assert k3 > k0
+
+
+def test_zipf_tokens(key):
+    t = zipf_tokens(key, 4, 512, vocab=1000)
+    assert t.shape == (4, 512)
+    assert int(t.min()) >= 0 and int(t.max()) < 1000
+    # zipf: low ids much more frequent
+    flat = np.asarray(t).ravel()
+    assert (flat < 10).mean() > (flat >= 500).mean()
+
+
+def test_lm_batches_labels_shifted(key):
+    spec = LMBatchSpec(batch=2, seq=16, vocab=100)
+    b = next(lm_batches(key, spec))
+    np.testing.assert_array_equal(np.asarray(b["labels"][:, :-1]),
+                                  np.asarray(b["tokens"][:, 1:]))
+    assert (np.asarray(b["labels"][:, -1]) == -1).all()
+
+
+def test_host_shard():
+    batch = {"tokens": jnp.arange(8)[:, None]}
+    s0 = host_shard(batch, 0, 2)
+    s1 = host_shard(batch, 1, 2)
+    np.testing.assert_array_equal(np.asarray(s0["tokens"]).ravel(),
+                                  [0, 1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(s1["tokens"]).ravel(),
+                                  [4, 5, 6, 7])
+
+
+def test_encode_batch_rate(key):
+    x = jnp.stack([jnp.zeros((10,)), jnp.linspace(0, 1, 10)])
+    s = encode_batch(key, x, 800)
+    assert s.shape == (800, 2, 10)
+    # max-value element fires ≈ every step, zero never
+    rates = np.asarray(s.mean(axis=0))
+    assert rates[1, -1] > 0.95
+    assert rates[1, 0] < 0.05
+
+
+def test_spike_stream(key):
+    it = spike_stream(key, lambda k, n: synthetic_digits(k, n),
+                      batch=4, t_steps=6, n_steps=3)
+    batches = list(it)
+    assert len(batches) == 3
+    assert batches[0]["spikes"].shape == (6, 4, 784)
+    assert batches[0]["labels"].shape == (4,)
+
+
+def test_prefetcher_preserves_order():
+    it = iter([{"i": i} for i in range(20)])
+    pf = Prefetcher(it, depth=3)
+    out = [int(b["i"]) for b in pf]
+    assert out == list(range(20))

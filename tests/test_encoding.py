@@ -1,0 +1,57 @@
+"""Rate coding + ISI analysis (§IV-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import (isi_histogram, isi_histogram_batched,
+                                 minmax_normalise, rate_code,
+                                 select_history_depth)
+
+
+def test_minmax_range(key):
+    x = jax.random.normal(key, (4, 100)) * 7 + 3
+    n = minmax_normalise(x, axis=-1)
+    assert float(n.min()) >= 0.0 and float(n.max()) <= 1.0
+    np.testing.assert_allclose(np.asarray(n.min(axis=-1)), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(n.max(axis=-1)), 1.0, atol=1e-6)
+
+
+def test_rate_code_expectation(key):
+    """Eq. 30: empirical rate → x_norm."""
+    x = jnp.asarray([0.0, 0.25, 0.5, 0.75, 1.0])
+    s = rate_code(key, x, 4000)
+    rate = np.asarray(s.mean(axis=0))
+    np.testing.assert_allclose(rate, np.asarray(x), atol=0.03)
+
+
+def test_isi_histogram_agrees_with_batched(key):
+    s = jax.random.bernoulli(key, 0.3, (200, 8)).astype(jnp.uint8)
+    a = isi_histogram(s)
+    b = isi_histogram_batched(s)
+    np.testing.assert_array_equal(a.counts, b.counts)
+    assert a.n_intervals == b.n_intervals
+
+
+def test_isi_geometric_distribution(key):
+    """Bernoulli(p) spikes → ISI ~ Geometric(p); depth-7 coverage matches
+    1-(1-p)^7 — the §IV-B mechanism behind the paper's depth choice."""
+    p = 0.4
+    s = jax.random.bernoulli(key, p, (5000, 16)).astype(jnp.uint8)
+    stats = isi_histogram_batched(s)
+    want = 1 - (1 - p) ** 7
+    assert abs(stats.coverage(7) - want) < 0.01
+
+
+def test_depth_selection(key):
+    s = jax.random.bernoulli(key, 0.5, (10_000, 32)).astype(jnp.uint8)
+    stats = isi_histogram_batched(s)
+    d = select_history_depth(stats, 0.99)
+    # Geometric(0.5): 1-(0.5)^d ≥ 0.99 → d = 7 (coverage 0.9922)
+    assert d == 7
+
+
+def test_empty_raster():
+    s = jnp.zeros((50, 4), jnp.uint8)
+    stats = isi_histogram_batched(s)
+    assert stats.n_intervals == 0
+    assert stats.coverage(7) == 0.0

@@ -1,0 +1,106 @@
+"""ITP-STDP learning engine (§III-B/V): dynamics, quantisation, kernel parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import history as H
+from repro.core.engine import (EngineConfig, EngineState, engine_step,
+                               init_engine, prototype_engine, run_engine)
+from repro.core.lif import LIFParams
+
+
+def test_prototype_is_4x4(key):
+    cfg, st = prototype_engine(key)
+    assert st.w.shape == (4, 4)
+    assert st.pre_hist.planes.shape == (7, 4)
+
+
+def test_engine_run_bounds_and_shapes(key):
+    cfg = EngineConfig(n_pre=16, n_post=8, eta=0.5)
+    st = init_engine(key, cfg)
+    train = jax.random.bernoulli(key, 0.3, (50, 16))
+    st2, post = run_engine(st, train, cfg)
+    assert post.shape == (50, 8)
+    assert float(st2.w.min()) >= cfg.w_min
+    assert float(st2.w.max()) <= cfg.w_max
+    assert not np.isnan(np.asarray(st2.w)).any()
+
+
+def test_engine_weights_move(key):
+    cfg = EngineConfig(n_pre=8, n_post=8, eta=0.25)
+    st = init_engine(key, cfg)
+    train = jax.random.bernoulli(key, 0.4, (100, 8))
+    st2, _ = run_engine(st, train, cfg)
+    assert float(jnp.abs(st2.w - st.w).max()) > 1e-3
+
+
+def test_engine_quantised_weights_on_grid(key):
+    cfg = EngineConfig(n_pre=8, n_post=8, quantise=True, w_bits=8, eta=0.5)
+    st = init_engine(key, cfg)
+    train = jax.random.bernoulli(key, 0.4, (30, 8))
+    st2, _ = run_engine(st, train, cfg)
+    levels = (1 << (cfg.w_bits - 1)) - 1
+    scaled = np.asarray(st2.w) * levels
+    np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-4)
+
+
+def test_engine_compensated_itp_equals_exact_semantics(key):
+    """Comp. ITP reads e^(-k/τ) exactly — same engine trajectory as an
+    engine evaluating the base-e kernel (the paper's equivalence at the
+    system level)."""
+    cfg_itp = EngineConfig(n_pre=8, n_post=8, compensate=True)
+    st = init_engine(key, cfg_itp)
+    train = jax.random.bernoulli(key, 0.35, (60, 8))
+    st_a, post_a = run_engine(st, train, cfg_itp)
+    # manually run with explicit exp(-k/τ) readout
+    from repro.core.stdp import synapse_update
+    from repro.core.lif import lif_init, lif_step
+
+    w = st.w
+    pre_h, post_h = st.pre_hist, st.post_hist
+    neurons = st.neurons
+    for t in range(train.shape[0]):
+        pre = train[t]
+        i_in = pre.astype(jnp.float32) @ w
+        neurons, post = lif_step(neurons, i_in, cfg_itp.lif)
+        w = synapse_update(w, pre, post, H.as_register(pre_h),
+                           H.as_register(post_h), cfg_itp.stdp,
+                           pairing="nearest", compensate=True,
+                           eta=cfg_itp.eta)
+        pre_h = H.push(pre_h, pre)
+        post_h = H.push(post_h, post)
+    np.testing.assert_allclose(np.asarray(st_a.w), np.asarray(w), rtol=1e-6)
+
+
+def test_engine_kernel_backed_step_matches_reference(key):
+    """One engine step with the Pallas weight update ≡ the core path."""
+    from repro.kernels.itp_stdp.ops import engine_weight_update
+    cfg = EngineConfig(n_pre=32, n_post=24, eta=0.5)
+    st = init_engine(key, cfg)
+    # roll some history in
+    train = jax.random.bernoulli(key, 0.4, (10, 32))
+    st, _ = run_engine(st, train, cfg)
+    pre = jax.random.bernoulli(jax.random.fold_in(key, 9), 0.5, (32,))
+    i_in = pre.astype(jnp.float32) @ st.w
+    from repro.core.lif import lif_step
+    _, post = lif_step(st.neurons, i_in, cfg.lif)
+    w_kernel = engine_weight_update(st.w, pre, post, st.pre_hist,
+                                    st.post_hist, cfg.stdp,
+                                    pairing=cfg.pairing, eta=cfg.eta,
+                                    use_kernel=True, interpret=True)
+    from repro.core.stdp import synapse_update
+    w_ref = synapse_update(st.w, pre, post, H.as_register(st.pre_hist),
+                           H.as_register(st.post_hist), cfg.stdp,
+                           pairing=cfg.pairing, eta=cfg.eta)
+    np.testing.assert_allclose(np.asarray(w_kernel), np.asarray(w_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_engine_silent_input_is_stable(key):
+    cfg = EngineConfig(n_pre=8, n_post=8)
+    st = init_engine(key, cfg)
+    train = jnp.zeros((20, 8), jnp.bool_)
+    st2, post = run_engine(st, train, cfg)
+    np.testing.assert_allclose(np.asarray(st2.w), np.asarray(st.w))
+    assert not bool(post.any())

@@ -1,0 +1,68 @@
+"""Bitplane spike-history ring buffer vs the naive shift-register model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.history import (as_register, fixed_point_value, init_history,
+                                pack_words, push, unpack_words)
+
+
+def _naive_shift(raster):
+    """Reference: an actual shift register per neuron (depth, steps)."""
+    T, n = raster.shape
+    return raster  # caller slices
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data(),
+       depth=st.integers(2, 8), n=st.integers(1, 5), steps=st.integers(0, 20))
+def test_ring_buffer_matches_shift_register(data, depth, n, steps):
+    raster = data.draw(
+        st.lists(st.lists(st.integers(0, 1), min_size=n, max_size=n),
+                 min_size=steps, max_size=steps))
+    h = init_history(n, depth)
+    for row in raster:
+        h = push(h, jnp.asarray(row, jnp.uint8))
+    reg = np.asarray(as_register(h))           # (n, depth), k=0 most recent
+    for i in range(n):
+        for k in range(depth):
+            t = steps - 1 - k                  # step that slot k refers to
+            want = raster[t][i] if t >= 0 else 0
+            assert reg[i, k] == want, (i, k, reg[i], raster)
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data(), depth=st.integers(1, 8), n=st.integers(1, 6))
+def test_pack_unpack_roundtrip(data, depth, n):
+    bits = data.draw(st.lists(
+        st.lists(st.integers(0, 1), min_size=depth, max_size=depth),
+        min_size=n, max_size=n))
+    h = init_history(n, depth)
+    # feed so that register equals bits (push oldest first)
+    for k in range(depth - 1, -1, -1):
+        h = push(h, jnp.asarray([bits[i][k] for i in range(n)], jnp.uint8))
+    words = pack_words(h)
+    reg = unpack_words(words, depth)
+    np.testing.assert_array_equal(np.asarray(reg),
+                                  np.asarray(bits, np.uint8))
+
+
+def test_fixed_point_value_matches_place_values():
+    h = init_history(8, 8)
+    pattern = [1, 0, 1, 0, 0, 1, 0, 1]        # k=0 → MSB
+    for k in range(7, -1, -1):
+        h = push(h, jnp.asarray([pattern[k]] * 8, jnp.uint8))
+    words = pack_words(h)
+    v = float(fixed_point_value(words, 8)[0])
+    want = sum(b * 2.0 ** -k for k, b in enumerate(pattern))
+    assert abs(v - want) < 1e-6
+
+
+def test_push_is_o_depth_state():
+    h = init_history(4, 7)
+    assert h.planes.shape == (7, 4)
+    h2 = push(h, jnp.ones(4, jnp.uint8))
+    # only one plane differs — the ring write touches a single slot
+    diff = np.asarray(h2.planes != h.planes).any(axis=1)
+    assert diff.sum() == 1

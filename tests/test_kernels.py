@@ -1,0 +1,158 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.history import init_history, push
+from repro.core.lif import LIFParams, LIFState, lif_init, lif_step
+from repro.core.stdp import STDPParams, po2_weights, synapse_update
+
+
+# ---------------------------------------------------------------------------
+# ITP-STDP fused kernel
+# ---------------------------------------------------------------------------
+
+def _random_setup(key, n_pre, n_post, depth):
+    ks = jax.random.split(key, 5)
+    w = jax.random.uniform(ks[0], (n_pre, n_post))
+    pre_s = jax.random.bernoulli(ks[1], 0.4, (n_pre,)).astype(jnp.float32)
+    post_s = jax.random.bernoulli(ks[2], 0.4, (n_post,)).astype(jnp.float32)
+    pre_h = jax.random.bernoulli(ks[3], 0.3, (depth, n_pre)).astype(jnp.float32)
+    post_h = jax.random.bernoulli(ks[4], 0.3, (depth, n_post)).astype(jnp.float32)
+    return w, pre_s, post_s, pre_h, post_h
+
+
+@pytest.mark.parametrize("n_pre,n_post", [(128, 128), (256, 128), (512, 384)])
+@pytest.mark.parametrize("nearest", [True, False])
+@pytest.mark.parametrize("depth", [7, 8])
+def test_itp_stdp_kernel_vs_ref(key, n_pre, n_post, nearest, depth):
+    from repro.kernels.itp_stdp.kernel import itp_stdp_update
+    from repro.kernels.itp_stdp.ref import itp_stdp_update_ref
+    w, pre_s, post_s, pre_h, post_h = _random_setup(key, n_pre, n_post, depth)
+    p = STDPParams()
+    ltp = p.a_plus * po2_weights(depth, p.tau_plus)
+    ltd = p.a_minus * po2_weights(depth, p.tau_minus)
+    got = itp_stdp_update(w, pre_s, post_s, pre_h, post_h, ltp, ltd,
+                          nearest=nearest, eta=0.25, tile_pre=128,
+                          tile_post=128, interpret=True)
+    want = itp_stdp_update_ref(w, pre_s, post_s, pre_h, post_h, ltp, ltd,
+                               nearest=nearest, eta=0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_engine_weight_update_matches_core(key):
+    """Kernel wrapper ≡ repro.core.stdp.synapse_update on ragged sizes."""
+    from repro.kernels.itp_stdp.ops import engine_weight_update
+    n_pre, n_post, depth = 100, 50, 7
+    p = STDPParams()
+    w = jax.random.uniform(key, (n_pre, n_post))
+    pre_s = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (n_pre,))
+    post_s = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.5, (n_post,))
+    pre_hist = init_history(n_pre, depth)
+    post_hist = init_history(n_post, depth)
+    for t in range(10):
+        pre_hist = push(pre_hist, jax.random.bernoulli(
+            jax.random.fold_in(key, 10 + t), 0.3, (n_pre,)).astype(jnp.uint8))
+        post_hist = push(post_hist, jax.random.bernoulli(
+            jax.random.fold_in(key, 50 + t), 0.3, (n_post,)).astype(jnp.uint8))
+    for pairing in ("nearest", "all"):
+        got = engine_weight_update(w, pre_s, post_s, pre_hist, post_hist, p,
+                                   pairing=pairing, eta=0.5, use_kernel=True,
+                                   interpret=True)
+        from repro.core.history import as_register
+        want = synapse_update(w, pre_s, post_s, as_register(pre_hist),
+                              as_register(post_hist), p, pairing=pairing,
+                              eta=0.5)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# LIF kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,n", [(1, 128), (8, 512), (3, 100), (16, 1024)])
+def test_lif_kernel_vs_ref(key, b, n):
+    from repro.kernels.lif.ops import lif_step_kernel
+    p = LIFParams(tau=2.0, v_th=0.7)
+    v = jax.random.uniform(key, (b, n), minval=-0.5, maxval=1.2)
+    i_in = jax.random.uniform(jax.random.fold_in(key, 1), (b, n),
+                              maxval=0.8)
+    st = LIFState(v=v)
+    s1, sp1 = lif_step_kernel(st, i_in, p, use_kernel=True, interpret=True)
+    s2, sp2 = lif_step(st, i_in, p)
+    np.testing.assert_allclose(np.asarray(s1.v), np.asarray(s2.v),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sp1), np.asarray(sp2))
+
+
+def test_lif_kernel_1d_api(key):
+    from repro.kernels.lif.ops import lif_step_kernel
+    p = LIFParams()
+    st = lif_init((40,), p)
+    i_in = jax.random.uniform(key, (40,))
+    s1, sp1 = lif_step_kernel(st, i_in, p, use_kernel=True, interpret=True)
+    assert s1.v.shape == (40,) and sp1.shape == (40,)
+
+
+# ---------------------------------------------------------------------------
+# po2 quantiser kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(x=st.floats(-1e6, 1e6, allow_nan=False, width=32))
+def test_po2_roundtrip_properties(x):
+    from repro.kernels.po2_quant.ref import po2_roundtrip_ref
+    q = float(po2_roundtrip_ref(jnp.asarray(x, jnp.float32)))
+    if x == 0.0 or abs(x) < 1.2e-38:   # zero / f32-subnormal underflow → 0
+        assert q == 0.0 or np.sign(q) == np.sign(x)
+    else:
+        assert np.sign(q) == np.sign(x)
+        if 1e-15 < abs(x) < 1e15:   # in exponent range
+            # nearest po2 in log space: ratio within [2^-0.5, 2^0.5]
+            ratio = q / x
+            assert 0.7071 / 1.001 <= ratio <= 1.4143 * 1.001
+            # q is an exact power of two
+            m, e = np.frexp(abs(q))
+            assert m == 0.5
+
+
+@pytest.mark.parametrize("n", [128, 500, 4096])
+def test_po2_kernel_vs_ref(key, n):
+    from repro.kernels.po2_quant.kernel import po2_decode, po2_encode
+    from repro.kernels.po2_quant.ref import po2_decode_ref, po2_encode_ref
+    x = jax.random.normal(key, (n,)) * jnp.exp(
+        jax.random.uniform(jax.random.fold_in(key, 1), (n,), minval=-20,
+                           maxval=20))
+    pad = (-n) % 128
+    xp = jnp.pad(x, (0, pad))
+    enc_k = po2_encode(xp, tile=128, interpret=True)[:n]
+    enc_r = po2_encode_ref(x)
+    np.testing.assert_array_equal(np.asarray(enc_k), np.asarray(enc_r))
+    dec_k = po2_decode(jnp.pad(enc_r, (0, pad)), tile=128,
+                       interpret=True)[:n]
+    dec_r = po2_decode_ref(enc_r)
+    np.testing.assert_allclose(np.asarray(dec_k), np.asarray(dec_r))
+
+
+def test_po2_quantize_tree(key):
+    from repro.kernels.po2_quant.ops import po2_quantize_tree
+    tree = {"a": jax.random.normal(key, (37,)),
+            "b": {"c": jax.random.normal(jax.random.fold_in(key, 1), (8, 9))}}
+    out = po2_quantize_tree(tree)
+    for leaf in jax.tree_util.tree_leaves(out):
+        vals = np.abs(np.asarray(leaf))
+        nz = vals[vals > 0]
+        m, _ = np.frexp(nz)
+        assert (m == 0.5).all()
+
+
+def test_po2_quantize_kernel_path(key):
+    from repro.kernels.po2_quant.ops import po2_quantize
+    x = jax.random.normal(key, (77,))
+    a = po2_quantize(x, use_kernel=True, interpret=True)
+    b = po2_quantize(x, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))

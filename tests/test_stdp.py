@@ -1,0 +1,168 @@
+"""Core STDP rule family: the paper's central equivalence claims."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.stdp import (RULES, STDPParams, a2a_delta_from_history,
+                             exact_stdp, imstdp, itp_stdp, linear_stdp,
+                             nn_delta_from_history, pair_gate, po2_weights,
+                             synapse_update)
+
+LN2 = math.log(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Paper eq. 18/20: compensated ITP ≡ exact STDP
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(dt=st.floats(-50.0, 50.0, allow_nan=False),
+       a_plus=st.floats(0.1, 4.0), a_minus=st.floats(0.1, 4.0),
+       tau=st.floats(0.5, 20.0))
+def test_itp_compensated_equals_exact(dt, a_plus, a_minus, tau):
+    p = STDPParams(a_plus=a_plus, a_minus=a_minus, tau_plus=tau, tau_minus=tau)
+    exact = float(exact_stdp(jnp.asarray(dt), p))
+    itp = float(itp_stdp(jnp.asarray(dt), p, compensate=True))
+    assert abs(exact - itp) <= 1e-5 * max(1.0, abs(exact))
+
+
+def test_itp_uncompensated_is_base2():
+    p = STDPParams()
+    dt = jnp.linspace(-10, 10, 201)
+    got = itp_stdp(dt, p, compensate=False)
+    want = jnp.where(dt >= 0, p.a_plus * 2.0 ** (-dt / p.tau_plus),
+                     -p.a_minus * 2.0 ** (dt / p.tau_minus))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_uncompensated_error_is_bounded():
+    """§IV-A: the nocomp deviation is a τ change, bounded on the window."""
+    p = STDPParams()
+    dt = jnp.linspace(0.0, 20.0, 400)
+    e = exact_stdp(dt, p)
+    i = itp_stdp(dt, p, compensate=False)
+    rel = jnp.max(jnp.abs(e - i))
+    assert float(rel) < 0.25 * p.a_plus   # bounded, nonzero
+    assert float(rel) > 0.01 * p.a_plus
+
+
+def test_rule_registry():
+    p = STDPParams()
+    for name, rule in RULES.items():
+        out = rule(jnp.asarray([-2.0, 0.0, 2.0]), p)
+        assert out.shape == (3,)
+        assert float(out[1]) > 0  # dt=0 → LTP side
+        assert float(out[0]) < 0 <= float(out[2])
+
+
+def test_linear_and_imstdp_approximate_exact():
+    p = STDPParams()
+    dt = jnp.linspace(-8, 8, 321)
+    e = exact_stdp(dt, p)
+    for rule in (linear_stdp, imstdp):
+        a = rule(dt, p)
+        # same sign structure, bounded deviation (these are the baselines
+        # whose error the paper criticises — nonzero but sane)
+        assert float(jnp.max(jnp.abs(a - e))) < 1.2
+        assert float(jnp.mean(jnp.abs(a - e))) > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Intrinsic-timing readout (Figs. 2-3, 10-11)
+# ---------------------------------------------------------------------------
+
+def test_po2_weights_compensated_matches_exact_kernel():
+    w = po2_weights(8, 4.0, compensate=True)
+    k = jnp.arange(8, dtype=jnp.float32)
+    np.testing.assert_allclose(w, jnp.exp(-k / 4.0), rtol=1e-6)
+
+
+def test_po2_weights_uncompensated_is_place_value():
+    w = po2_weights(8, 1.0, compensate=False)
+    np.testing.assert_allclose(w, 2.0 ** -jnp.arange(8, dtype=jnp.float32),
+                               rtol=1e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(bits=st.lists(st.integers(0, 1), min_size=7, max_size=7))
+def test_nn_readout_is_priority_encode(bits):
+    """NN pairing reads exactly the most recent spike (the MSB mask)."""
+    h = jnp.asarray([bits], jnp.float32)          # (1, depth)
+    got = float(nn_delta_from_history(h, 1.0, 4.0, compensate=False)[0])
+    if 1 in bits:
+        k = bits.index(1)
+        assert abs(got - 2.0 ** (-k / 4.0)) < 1e-6
+    else:
+        assert got == 0.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(bits=st.lists(st.integers(0, 1), min_size=7, max_size=7))
+def test_a2a_readout_is_fixed_point_value(bits):
+    """A2A pairing = the binary-fraction read of the whole register."""
+    h = jnp.asarray([bits], jnp.float32)
+    got = float(a2a_delta_from_history(h, 1.0, 1.0, compensate=False)[0])
+    want = sum(b * 2.0 ** (-k) for k, b in enumerate(bits))
+    assert abs(got - want) < 1e-6
+
+
+def test_a2a_equals_sum_over_pairs():
+    """Eq. 2: the fixed-point read IS the all-to-all accumulation."""
+    p = STDPParams()
+    h = jnp.asarray([[1, 0, 1, 1, 0, 0, 1]], jnp.float32)
+    got = float(a2a_delta_from_history(h, p.a_plus, p.tau_plus,
+                                       compensate=True)[0])
+    want = sum(p.a_plus * math.exp(-k / p.tau_plus)
+               for k, b in enumerate([1, 0, 1, 1, 0, 0, 1]) if b)
+    assert abs(got - want) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Control logic (§V-A) and the full synapse update
+# ---------------------------------------------------------------------------
+
+def test_pair_gate_xor_logic():
+    pre = jnp.asarray([0, 0, 1, 1], jnp.bool_)
+    post = jnp.asarray([0, 1, 0, 1], jnp.bool_)
+    ltp, ltd = pair_gate(pre, post)
+    np.testing.assert_array_equal(np.asarray(ltp), [False, True, False, False])
+    np.testing.assert_array_equal(np.asarray(ltd), [False, False, True, False])
+
+
+def test_synapse_update_clips_and_signs(key):
+    n_pre, n_post, depth = 8, 6, 7
+    p = STDPParams()
+    w = jnp.full((n_pre, n_post), 0.5)
+    pre_h = jax.random.bernoulli(key, 0.4, (n_pre, depth)).astype(jnp.float32)
+    post_h = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.4,
+                                  (n_post, depth)).astype(jnp.float32)
+    pre_s = jnp.asarray([1, 0, 1, 0, 1, 0, 1, 0])
+    post_s = jnp.asarray([0, 1, 0, 1, 0, 1])
+    w2 = synapse_update(w, pre_s, post_s, pre_h, post_h, p, eta=10.0)
+    assert float(w2.min()) >= 0.0 and float(w2.max()) <= 1.0
+    # pre=0, post=1 columns potentiate (ltp only); pre=1, post=0 depress
+    w3 = synapse_update(w, pre_s, post_s, pre_h, post_h, p, eta=0.01)
+    dw = np.asarray(w3 - w)
+    # pre fires on even rows; post fires on odd columns
+    assert (dw[1::2][:, 1::2] >= 0).all()    # pre silent, post fired → LTP
+    assert (dw[::2][:, ::2] <= 0).all()      # pre fired, post silent → LTD
+    assert np.allclose(dw[::2][:, 1::2], 0)  # both fired → no update
+    assert np.allclose(dw[1::2][:, ::2], 0)  # neither fired → no update
+
+
+def test_nearest_vs_all_pairing_differ(key):
+    p = STDPParams()
+    w = jnp.full((4, 4), 0.5)
+    pre_h = jnp.ones((4, 7), jnp.float32)     # dense history
+    post_h = jnp.ones((4, 7), jnp.float32)
+    pre_s = jnp.asarray([1, 1, 0, 0])
+    post_s = jnp.asarray([0, 0, 1, 1])
+    wn = synapse_update(w, pre_s, post_s, pre_h, post_h, p, pairing="nearest",
+                        eta=0.1)
+    wa = synapse_update(w, pre_s, post_s, pre_h, post_h, p, pairing="all",
+                        eta=0.1)
+    assert not np.allclose(np.asarray(wn), np.asarray(wa))

@@ -1,0 +1,119 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Perf-iteration driver: lower one cell with overrides, print the three
+roofline terms + per-kind collective breakdown + memory analysis.
+
+Usage:
+  PYTHONPATH=src python tools/hillclimb.py --arch qwen3-0.6b --shape train_4k \
+      [--profile replicated] [--remat dots] [--kv-dtype int8] \
+      [--analysis unroll|extrapolate|scan] [--tag name]
+
+Appends a JSON line to experiments/perf/<arch>__<shape>.jsonl.
+"""
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+from repro.distributed.sharding import use_mesh
+from repro.launch.dryrun import parse_collectives, _analyse_compiled
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import plan_cell
+from repro.train.train_step import TrainConfig
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--profile", default="fsdp",
+                    choices=("fsdp", "replicated", "dp", "dp_zero3"))
+    ap.add_argument("--remat", default="full",
+                    choices=("none", "full", "dots"))
+    ap.add_argument("--kv-dtype", default="bfloat16",
+                    choices=("bfloat16", "int8"))
+    ap.add_argument("--analysis", default="unroll",
+                    choices=("unroll", "extrapolate", "scan"))
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=False)
+    tc = TrainConfig(remat=args.remat, sharding_profile=args.profile,
+                     unroll=args.analysis == "unroll")
+    rec = {"tag": args.tag or f"{args.profile}/{args.remat}/{args.kv_dtype}",
+           "arch": args.arch, "shape": args.shape,
+           "profile": args.profile, "remat": args.remat,
+           "kv_dtype": args.kv_dtype, "analysis": args.analysis}
+    t0 = time.time()
+    with use_mesh(mesh):
+        if args.analysis == "extrapolate":
+            from repro.launch.extrapolate import extrapolate_cell
+            est = extrapolate_cell(
+                cfg, shape, mesh, parse_collectives,
+                train_cfg=TrainConfig(remat=args.remat,
+                                      sharding_profile=args.profile),
+                kv_dtype=args.kv_dtype)
+            flops, byts = est["flops"], est["bytes accessed"]
+            coll = est["coll_operand"]
+            kinds = {k: v for k, v in est.items() if k.startswith("coll_")}
+            # memory analysis still needs a scanned compile
+            plan = plan_cell(cfg, shape, mesh,
+                             train_cfg=TrainConfig(
+                                 remat=args.remat,
+                                 sharding_profile=args.profile),
+                             kv_dtype=args.kv_dtype)
+            compiled = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                               out_shardings=plan.out_shardings,
+                               donate_argnums=() if args.no_donate
+                               else plan.donate).lower(*plan.args).compile()
+            mem = _analyse_compiled(compiled).get("memory", {})
+        else:
+            plan = plan_cell(cfg, shape, mesh, train_cfg=tc,
+                             kv_dtype=args.kv_dtype)
+            compiled = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                               out_shardings=plan.out_shardings,
+                               donate_argnums=() if args.no_donate
+                               else plan.donate).lower(*plan.args).compile()
+            a = _analyse_compiled(compiled)
+            flops = a.get("cost", {}).get("flops", 0.0)
+            byts = a.get("cost", {}).get("bytes accessed", 0.0)
+            coll = a["collectives"]["total_operand_bytes"]
+            kinds = {k: v["operand_bytes"] for k, v in
+                     a["collectives"].items() if isinstance(v, dict)}
+            mem = a.get("memory", {})
+    rec.update({
+        "seconds": round(time.time() - t0, 1),
+        "flops": flops, "bytes": byts, "coll_operand_bytes": coll,
+        "coll_kinds": kinds,
+        "t_compute": flops / PEAK, "t_memory": byts / HBM,
+        "t_collective": coll / LINK,
+        "mem_args": mem.get("argument_size_in_bytes", 0),
+        "mem_temp": mem.get("temp_size_in_bytes", 0),
+        "mem_out": mem.get("output_size_in_bytes", 0),
+    })
+    os.makedirs("experiments/perf", exist_ok=True)
+    path = (f"experiments/perf/{args.arch.replace('.', '_')}"
+            f"__{args.shape}.jsonl")
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(f"[{rec['tag']}] compute {rec['t_compute']:.3f}s | "
+          f"memory {rec['t_memory']:.3f}s | "
+          f"collective {rec['t_collective']:.3f}s | "
+          f"temp {rec['mem_temp'] / 1e9:.1f}GB args "
+          f"{rec['mem_args'] / 1e9:.1f}GB  ({rec['seconds']}s)")
+    for k, v in sorted(rec["coll_kinds"].items(), key=lambda x: -x[1]):
+        if v:
+            print(f"    {k}: {v:.3e} B")
+
+
+if __name__ == "__main__":
+    main()
