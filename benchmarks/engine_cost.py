@@ -22,11 +22,14 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.baseline import (CounterEngineConfig, init_counter_engine,
                                  run_counter_engine)
-from repro.core.engine import EngineConfig, init_engine, run_engine
+from repro.core.engine import (EngineConfig, init_engine,
+                               init_engine_population, run_engine,
+                               run_engine_population)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # ---------------------------------------------------------------------------
 # 1. Op/bit-count model (per synaptic weight update, nearest-neighbour)
@@ -108,10 +111,55 @@ def measure_throughput(n: int, t_steps: int = 100, seed: int = 0) -> dict:
             "speedup": t_cnt / t_itp}
 
 
+def measure_backend_throughput(n: int, replicas: int, t_steps: int,
+                               backend: str, seed: int = 0) -> float:
+    """SOP/s of the population engine on one weight-update backend."""
+    key = jax.random.PRNGKey(seed)
+    cfg = EngineConfig(n_pre=n, n_post=n, backend=backend)
+    states = init_engine_population(key, cfg, replicas)
+    trains = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.3,
+                                  (replicas, t_steps, n))
+    fn = jax.jit(lambda s, x: run_engine_population(s, x, cfg))
+    t = _time_fn(fn, states, trains)
+    return replicas * t_steps * n * n / t
+
+
+def fused_backend_name() -> str:
+    """The fused backend this host can actually run.
+
+    CPU can only run the Pallas kernel through the interpreter
+    (``fused_interpret``); on an accelerator the real compiled kernel
+    (``fused``) is measured.  The chosen name is recorded in the artifact
+    so interpreter numbers are never mistaken for kernel numbers.
+    """
+    return "fused_interpret" if jax.default_backend() == "cpu" else "fused"
+
+
+def measure_backend_grid(sizes=(128, 256, 512), batches=(1, 8),
+                         t_steps: int = 50) -> list[dict]:
+    """Reference-vs-fused throughput over a (batch × engine-size) grid."""
+    fused_name = fused_backend_name()
+    rows = []
+    for n in sizes:
+        for r in batches:
+            ref = measure_backend_throughput(n, r, t_steps, "reference")
+            fused = measure_backend_throughput(n, r, t_steps, fused_name)
+            rows.append({"n": n, "replicas": r, "t_steps": t_steps,
+                         "fused_backend": fused_name,
+                         "reference_sops_per_s": ref,
+                         "fused_sops_per_s": fused,
+                         "fused_speedup": fused / ref})
+    return rows
+
+
 def run(out_dir: str = "experiments/bench", verbose: bool = True,
-        sizes=(256, 512, 1024)) -> dict:
+        sizes=(256, 512, 1024), grid_sizes=(128, 256, 512),
+        grid_batches=(1, 8), grid_steps: int = 50,
+        quick: bool = False) -> dict:
     throughput = [measure_throughput(n) for n in sizes]
+    backend_grid = measure_backend_grid(grid_sizes, grid_batches, grid_steps)
     out = {"op_model": OP_MODEL, "throughput": throughput,
+           "backend_grid": backend_grid,
            "paper_claims": {
                "fpga_energy_eff_gain": "4.5x-219.8x",
                "asic_speedup": "4.8x-22.01x",
@@ -120,6 +168,18 @@ def run(out_dir: str = "experiments/bench", verbose: bool = True,
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "engine_cost.json"), "w") as f:
         json.dump(out, f)
+    # repo-root perf trajectory artifact: reference vs fused engine
+    # throughput per (size, batch) cell — the first point every later
+    # scaling PR appends to.  --quick runs use a smaller, incomparable
+    # grid, so they write a separate (gitignored) file rather than
+    # clobbering the tracked trajectory.
+    bench_name = "BENCH_engine.quick.json" if quick else "BENCH_engine.json"
+    with open(os.path.join(REPO_ROOT, bench_name), "w") as f:
+        json.dump({"benchmark": "engine_backend_throughput",
+                   "unit": "SOP/s",
+                   "quick": quick,
+                   "fused_backend": fused_backend_name(),
+                   "grid": backend_grid}, f, indent=1)
     if verbose:
         print("— engine cost model (paper Tables III-V analogue) —")
         hdr = f"  {'variant':24s} {'exp':>4s} {'mul':>4s} {'amul':>5s} " \
@@ -136,6 +196,13 @@ def run(out_dir: str = "experiments/bench", verbose: bool = True,
             print(f"    n={t['n']:5d}: ITP {t['itp_sops_per_s']:.3e} SOP/s  "
                   f"counter-exact {t['counter_sops_per_s']:.3e} SOP/s  "
                   f"speedup ×{t['speedup']:.2f}")
+        print("  backend grid (reference vs fused Pallas datapath):")
+        for row in backend_grid:
+            print(f"    n={row['n']:5d} R={row['replicas']:3d}: "
+                  f"ref {row['reference_sops_per_s']:.3e} SOP/s  "
+                  f"fused {row['fused_sops_per_s']:.3e} SOP/s  "
+                  f"×{row['fused_speedup']:.2f}")
+        print(f"  → {bench_name} ({len(backend_grid)} grid cells)")
     return out
 
 

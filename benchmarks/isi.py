@@ -9,7 +9,6 @@ import json
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.encoding import (ISIStats, isi_histogram_batched,

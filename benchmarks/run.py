@@ -57,11 +57,16 @@ def main():
     if want("engine_cost"):
         from benchmarks import engine_cost
         t0 = time.time()
-        sizes = (64, 256) if args.quick else (256, 512, 1024)
-        r = engine_cost.run(args.out, sizes=sizes)
+        if args.quick:
+            r = engine_cost.run(args.out, sizes=(64, 256),
+                                grid_sizes=(64, 128, 256), grid_batches=(1, 4),
+                                grid_steps=25, quick=True)
+        else:
+            r = engine_cost.run(args.out)
         summary["engine_cost"] = {
             "seconds": round(time.time() - t0, 1),
-            "speedups": [t["speedup"] for t in r["throughput"]]}
+            "speedups": [t["speedup"] for t in r["throughput"]],
+            "fused_speedups": [c["fused_speedup"] for c in r["backend_grid"]]}
         print()
     if want("roofline"):
         from benchmarks import roofline

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.core.drift import DriftParams, update_curve_rmse
 from repro.core.engine import EngineConfig, init_engine, run_engine
 from repro.core.history import init_history, push, registers_depth_major
-from repro.core.stdp import STDPParams, magnitudes_depth_major
+from repro.core.stdp import magnitudes_depth_major
 
 key = jax.random.PRNGKey(0)
 

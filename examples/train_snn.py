@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.data import Prefetcher, encode_batch, spike_stream, synthetic_digits
+from repro.kernels.itp_stdp.ops import BACKENDS
 from repro.models import snn
 
 
@@ -21,6 +22,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rule", default="itp",
                     choices=("exact", "itp", "itp_nocomp"))
+    ap.add_argument("--backend", default="reference", choices=BACKENDS,
+                    help="weight-update datapath: pure-jnp reference or the "
+                         "fused Pallas kernel (interpret mode runs it on CPU)")
     ap.add_argument("--steps", type=int, default=300,
                     help="total simulation steps of STDP training")
     ap.add_argument("--t-raster", type=int, default=30)
@@ -28,13 +32,15 @@ def main():
     ap.add_argument("--hidden", type=int, default=100)
     args = ap.parse_args()
 
-    cfg = snn.mnist_2layer(args.rule, n_hidden=args.hidden)
+    cfg = snn.mnist_2layer(args.rule, n_hidden=args.hidden,
+                           backend=args.backend)
     key = jax.random.PRNGKey(0)
     state = snn.init_snn(key, cfg, args.batch)
     n_batches = max(args.steps // args.t_raster, 1)
 
     print(f"training 2-layer SNN ({784}→{args.hidden}) with rule="
-          f"{args.rule!r}: {n_batches} batches × {args.t_raster} steps")
+          f"{args.rule!r} backend={args.backend!r}: "
+          f"{n_batches} batches × {args.t_raster} steps")
     stream = Prefetcher(spike_stream(
         key, lambda k, n: synthetic_digits(k, n),
         batch=args.batch, t_steps=args.t_raster, n_steps=n_batches))

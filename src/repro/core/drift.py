@@ -17,14 +17,13 @@ convergence-time error = 7.36 % for uncompensated ITP-STDP.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.stdp import STDPParams, exact_stdp, get_rule
+from repro.core.stdp import STDPParams, get_rule
 
 
 @dataclasses.dataclass(frozen=True)

@@ -26,8 +26,9 @@ import jax.numpy as jnp
 
 from repro.core import history as H
 from repro.core.lif import LIFParams, LIFState, lif_init, lif_step
-from repro.core.stdp import (STDPParams, magnitudes_depth_major, pair_gate,
-                             synapse_update)
+from repro.core.stdp import STDPParams, magnitudes_depth_major, pair_gate
+from repro.kernels.itp_stdp.ops import (resolve_backend,
+                                        weight_update_depth_major)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,8 +43,12 @@ class EngineConfig:
     w_max: float = 1.0
     w_bits: int = 8                      # weight word width incl. sign
     quantise: bool = False               # round weights to the 8-bit grid
+    backend: str = "reference"           # reference | fused | fused_interpret
     stdp: STDPParams = dataclasses.field(default_factory=STDPParams)
     lif: LIFParams = dataclasses.field(default_factory=LIFParams)
+
+    def __post_init__(self):
+        resolve_backend(self.backend)   # validates against BACKENDS
 
 
 class EngineState(NamedTuple):
@@ -89,15 +94,29 @@ def engine_step(state: EngineState, pre_spikes: jax.Array,
     #    (depth, N) read with no relayout; the synapse matrix sees only a
     #    rank-1 gated outer product — O(N) readout + O(N²) add/mul, no
     #    per-pair transcendental (the intrinsic-timing claim, §III).
-    ltp_mag = magnitudes_depth_major(
-        H.registers_depth_major(state.pre_hist), cfg.stdp.a_plus,
-        cfg.stdp.tau_plus, pairing=cfg.pairing, compensate=cfg.compensate)
-    ltd_mag = magnitudes_depth_major(
-        H.registers_depth_major(state.post_hist), cfg.stdp.a_minus,
-        cfg.stdp.tau_minus, pairing=cfg.pairing, compensate=cfg.compensate)
-    ltp_en, ltd_en = pair_gate(pre_spikes[:, None], post_spikes[None, :])
-    dw = ltp_en * ltp_mag[:, None] - ltd_en * ltd_mag[None, :]
-    w = jnp.clip(state.w + cfg.eta * dw, cfg.w_min, cfg.w_max)
+    #    Backend-selectable: "reference" keeps the pure-jnp path; "fused"
+    #    routes through the Pallas kernel (one VMEM-resident RMW per tile),
+    #    "fused_interpret" the same kernel in interpret mode (CPU checks).
+    use_kernel, interpret = resolve_backend(cfg.backend)
+    if use_kernel:
+        w = weight_update_depth_major(
+            state.w, pre_spikes, post_spikes,
+            H.registers_depth_major(state.pre_hist),
+            H.registers_depth_major(state.post_hist),
+            cfg.stdp, pairing=cfg.pairing, compensate=cfg.compensate,
+            eta=cfg.eta, w_min=cfg.w_min, w_max=cfg.w_max,
+            interpret=interpret)
+    else:
+        ltp_mag = magnitudes_depth_major(
+            H.registers_depth_major(state.pre_hist), cfg.stdp.a_plus,
+            cfg.stdp.tau_plus, pairing=cfg.pairing, compensate=cfg.compensate)
+        ltd_mag = magnitudes_depth_major(
+            H.registers_depth_major(state.post_hist), cfg.stdp.a_minus,
+            cfg.stdp.tau_minus, pairing=cfg.pairing,
+            compensate=cfg.compensate)
+        ltp_en, ltd_en = pair_gate(pre_spikes[:, None], post_spikes[None, :])
+        dw = ltp_en * ltp_mag[:, None] - ltd_en * ltd_mag[None, :]
+        w = jnp.clip(state.w + cfg.eta * dw, cfg.w_min, cfg.w_max)
     if cfg.quantise:
         w = _quantise(w, cfg)
 
@@ -122,3 +141,31 @@ def prototype_engine(key: jax.Array) -> tuple[EngineConfig, EngineState]:
     """The paper's 4×4 fully connected prototype (§III-B / Table V row 1)."""
     cfg = EngineConfig(n_pre=4, n_post=4)
     return cfg, init_engine(key, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Batched population path: a fleet of independent engine replicas.
+#
+# One engine is the paper's unit of hardware; at serving/benchmark scale we
+# run R replicas (per-user networks, ensemble members, hyperparameter
+# sweeps) as a single vmapped program so XLA fuses the whole population
+# into one device launch per step.  All replica state leaves carry a
+# leading (R,) axis; the same EngineConfig (including ``backend``) applies
+# to every replica.
+# ---------------------------------------------------------------------------
+
+def init_engine_population(key: jax.Array, cfg: EngineConfig,
+                           n_replicas: int) -> EngineState:
+    """Independent per-replica init: R engines from R split keys."""
+    keys = jax.random.split(key, n_replicas)
+    return jax.vmap(lambda k: init_engine(k, cfg))(keys)
+
+
+def run_engine_population(states: EngineState, spike_trains: jax.Array,
+                          cfg: EngineConfig
+                          ) -> tuple[EngineState, jax.Array]:
+    """Scan every replica over its own raster; ``spike_trains``: (R, T, n_pre).
+
+    Returns (states', post rasters (R, T, n_post)).
+    """
+    return jax.vmap(lambda s, x: run_engine(s, x, cfg))(states, spike_trains)

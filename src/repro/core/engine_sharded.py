@@ -18,16 +18,17 @@ else.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import history as H
-from repro.core.engine import EngineConfig, EngineState, init_engine
+from repro.core.engine import EngineConfig, EngineState, _quantise
 from repro.core.lif import LIFState, lif_step
 from repro.core.stdp import magnitudes_depth_major, pair_gate
+from repro.kernels.itp_stdp.ops import (resolve_backend,
+                                        weight_update_depth_major)
 
 
 def shard_engine_state(state: EngineState, mesh: Mesh,
@@ -55,6 +56,7 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
     histories and neuron state replicate, ``state.w`` shards (pre, post).
     """
     pre_ax, post_ax = axes
+    use_kernel, interpret = resolve_backend(cfg.backend)
 
     def local_step(w, pre_spikes, pre_reg, post_reg, v):
         # w: local (pre_tile, post_tile); spikes/histories: global shards
@@ -62,15 +64,28 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
         i_local = pre_spikes.astype(jnp.float32) @ w       # (post_tile,)
         i_in = jax.lax.psum(i_local, pre_ax)               # the ONE collective
         neurons, post_spikes = lif_step(LIFState(v=v), i_in, cfg.lif)
-        ltp = magnitudes_depth_major(pre_reg, cfg.stdp.a_plus,
-                                     cfg.stdp.tau_plus, pairing=cfg.pairing,
-                                     compensate=cfg.compensate)
-        ltd = magnitudes_depth_major(post_reg, cfg.stdp.a_minus,
-                                     cfg.stdp.tau_minus, pairing=cfg.pairing,
-                                     compensate=cfg.compensate)
-        ltp_en, ltd_en = pair_gate(pre_spikes[:, None], post_spikes[None, :])
-        dw = ltp_en * ltp[:, None] - ltd_en * ltd[None, :]
-        w = jnp.clip(w + cfg.eta * dw, cfg.w_min, cfg.w_max)
+        if use_kernel:
+            # fused Pallas datapath per local tile — the intrinsic-timing
+            # update needs nothing beyond the device's own (pre, post) shard
+            w = weight_update_depth_major(
+                w, pre_spikes, post_spikes, pre_reg, post_reg, cfg.stdp,
+                pairing=cfg.pairing, compensate=cfg.compensate, eta=cfg.eta,
+                w_min=cfg.w_min, w_max=cfg.w_max, interpret=interpret)
+        else:
+            ltp = magnitudes_depth_major(pre_reg, cfg.stdp.a_plus,
+                                         cfg.stdp.tau_plus,
+                                         pairing=cfg.pairing,
+                                         compensate=cfg.compensate)
+            ltd = magnitudes_depth_major(post_reg, cfg.stdp.a_minus,
+                                         cfg.stdp.tau_minus,
+                                         pairing=cfg.pairing,
+                                         compensate=cfg.compensate)
+            ltp_en, ltd_en = pair_gate(pre_spikes[:, None],
+                                       post_spikes[None, :])
+            dw = ltp_en * ltp[:, None] - ltd_en * ltd[None, :]
+            w = jnp.clip(w + cfg.eta * dw, cfg.w_min, cfg.w_max)
+        if cfg.quantise:
+            w = _quantise(w, cfg)
         return w, post_spikes, neurons.v
 
     sharded = jax.shard_map(

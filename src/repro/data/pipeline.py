@@ -12,7 +12,6 @@ import threading
 from typing import Callable, Iterator
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.encoding import minmax_normalise, rate_code
 

@@ -20,7 +20,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels.po2_quant.ref import po2_decode_ref, po2_encode_ref
 

@@ -22,7 +22,6 @@ import threading
 from typing import Any, Sequence
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()

@@ -1,21 +1,44 @@
-"""Public jit'd wrapper for the fused ITP-STDP kernel.
+"""Public jit'd wrappers for the fused ITP-STDP kernel.
 
 Bridges ``repro.core`` state (SpikeHistory ring buffers, STDPParams) to the
-raw Pallas kernel, padding neuron counts to lane multiples.
+raw Pallas kernel, padding neuron counts to lane multiples.  Three entry
+points, from lowest to highest level:
+
+  * :func:`weight_update_depth_major` — fused update from depth-major
+    ``(depth, N)`` bitplane registers (the engine/sharded hot-path layout);
+  * :func:`engine_weight_update`      — same, from ``SpikeHistory`` state;
+  * :func:`synapse_delta`             — Δw only (no clip, no ``w`` read),
+    for batched callers that accumulate over replicas before applying.
+
+``BACKENDS`` is the canonical set of datapath selections shared by
+``EngineConfig.backend`` / ``SNNConfig.backend``; :func:`resolve_backend`
+maps a name to the (use_kernel, interpret) pair these wrappers take.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.history import SpikeHistory, as_register
+from repro.core.history import SpikeHistory, registers_depth_major
 from repro.core.stdp import STDPParams, po2_weights
 from repro.kernels.itp_stdp.kernel import itp_stdp_update
 from repro.kernels.itp_stdp.ref import itp_stdp_update_ref
 
 LANE = 128
+
+# datapath selections understood across the engine stack (engine, sharded
+# engine, SNN models, launcher, benchmarks):
+#   reference       — pure-jnp core path (repro.core.stdp)
+#   fused           — Pallas kernel compiled for the accelerator
+#   fused_interpret — Pallas kernel in interpret mode (CPU validation)
+BACKENDS = ("reference", "fused", "fused_interpret")
+
+
+def resolve_backend(backend: str) -> tuple[bool, bool]:
+    """Map a backend name to the ``(use_kernel, interpret)`` pair."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+    return backend != "reference", backend == "fused_interpret"
 
 
 def _pad_to(x: jax.Array, n: int, axis: int) -> jax.Array:
@@ -29,6 +52,60 @@ def _pad_to(x: jax.Array, n: int, axis: int) -> jax.Array:
 
 def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
+
+
+def _tile(padded: int) -> int:
+    """Largest of (256, LANE) that divides the padded (LANE-multiple) dim."""
+    return 256 if padded % 256 == 0 else LANE
+
+
+def weight_update_depth_major(w: jax.Array,
+                              pre_spike: jax.Array, post_spike: jax.Array,
+                              pre_bits: jax.Array, post_bits: jax.Array,
+                              params: STDPParams,
+                              *,
+                              pairing: str = "nearest",
+                              compensate: bool = True,
+                              eta: float = 1.0,
+                              w_min: float = 0.0,
+                              w_max: float = 1.0,
+                              use_kernel: bool = True,
+                              interpret: bool = True) -> jax.Array:
+    """Fused ITP-STDP update from depth-major ``(depth, N)`` registers.
+
+    ``pre_bits``/``post_bits`` are the logical registers with the k=0 row
+    most recent (``repro.core.history.registers_depth_major``) — the layout
+    the kernel consumes with no relayout.  Semantics match
+    ``repro.core.stdp.synapse_update`` (validated by tests/test_kernels.py
+    and tests/test_backend.py).
+    """
+    n_pre, n_post = w.shape
+    depth = pre_bits.shape[0]
+    po2_ltp = params.a_plus * po2_weights(depth, params.tau_plus,
+                                          compensate=compensate)
+    po2_ltd = params.a_minus * po2_weights(depth, params.tau_minus,
+                                           compensate=compensate)
+    nearest = pairing == "nearest"
+    if not use_kernel:
+        return itp_stdp_update_ref(w, pre_spike, post_spike, pre_bits,
+                                   post_bits, po2_ltp, po2_ltd,
+                                   nearest=nearest, eta=eta,
+                                   w_min=w_min, w_max=w_max)
+
+    p_pre = _round_up(n_pre, LANE)
+    p_post = _round_up(n_post, LANE)
+    out = itp_stdp_update(
+        _pad_to(_pad_to(w, p_pre, 0), p_post, 1),
+        _pad_to(pre_spike.astype(jnp.float32), p_pre, 0),
+        _pad_to(post_spike.astype(jnp.float32), p_post, 0),
+        _pad_to(pre_bits.astype(jnp.float32), p_pre, 1),
+        _pad_to(post_bits.astype(jnp.float32), p_post, 1),
+        po2_ltp, po2_ltd,
+        nearest=nearest, eta=eta, w_min=w_min, w_max=w_max,
+        tile_pre=_tile(p_pre), tile_post=_tile(p_post),
+        interpret=interpret,
+    )
+    return out[:n_pre, :n_post]
 
 
 def engine_weight_update(w: jax.Array,
@@ -48,34 +125,34 @@ def engine_weight_update(w: jax.Array,
     Drop-in accelerated replacement for ``repro.core.stdp.synapse_update``
     (same semantics, validated by tests/test_kernels.py).
     """
-    n_pre, n_post = w.shape
-    depth = pre_hist.depth
-    po2_ltp = params.a_plus * po2_weights(depth, params.tau_plus,
-                                          compensate=compensate)
-    po2_ltd = params.a_minus * po2_weights(depth, params.tau_minus,
-                                           compensate=compensate)
-    # core stores registers (N, depth); kernel wants depth-major (depth, N)
-    pre_bits = as_register(pre_hist).T
-    post_bits = as_register(post_hist).T
+    return weight_update_depth_major(
+        w, pre_spike, post_spike,
+        registers_depth_major(pre_hist), registers_depth_major(post_hist),
+        params, pairing=pairing, compensate=compensate, eta=eta,
+        w_min=w_min, w_max=w_max, use_kernel=use_kernel, interpret=interpret)
 
-    nearest = pairing == "nearest"
-    if not use_kernel:
-        return itp_stdp_update_ref(w, pre_spike, post_spike, pre_bits,
-                                   post_bits, po2_ltp, po2_ltd,
-                                   nearest=nearest, eta=eta,
-                                   w_min=w_min, w_max=w_max)
 
-    p_pre = _round_up(n_pre, LANE)
-    p_post = _round_up(n_post, LANE)
-    out = itp_stdp_update(
-        _pad_to(_pad_to(w, p_pre, 0), p_post, 1),
-        _pad_to(pre_spike.astype(jnp.float32), p_pre, 0),
-        _pad_to(post_spike.astype(jnp.float32), p_post, 0),
-        _pad_to(pre_bits, p_pre, 1),
-        _pad_to(post_bits, p_post, 1),
-        po2_ltp, po2_ltd,
-        nearest=nearest, eta=eta, w_min=w_min, w_max=w_max,
-        tile_pre=min(256, p_pre), tile_post=min(256, p_post),
-        interpret=interpret,
-    )
-    return out[:n_pre, :n_post]
+def synapse_delta(pre_spike: jax.Array, post_spike: jax.Array,
+                  pre_bits: jax.Array, post_bits: jax.Array,
+                  params: STDPParams,
+                  *,
+                  pairing: str = "nearest",
+                  compensate: bool = True,
+                  use_kernel: bool = True,
+                  interpret: bool = True) -> jax.Array:
+    """Raw Δw (pre × post) from depth-major registers — no clip, no ``w``.
+
+    Batched callers (the SNN fc layers, population training) vmap this over
+    replicas/batch, accumulate, and apply clip/quantise once — bit-identical
+    to the reference einsum path because the kernel's gated outer product is
+    linear in the gate terms.  Reuses the fused kernel with a zero weight
+    tile and an unbounded clip window.
+    """
+    n_pre = pre_bits.shape[1]
+    n_post = post_bits.shape[1]
+    zero_w = jnp.zeros((n_pre, n_post), jnp.float32)
+    return weight_update_depth_major(
+        zero_w, pre_spike, post_spike, pre_bits, post_bits, params,
+        pairing=pairing, compensate=compensate, eta=1.0,
+        w_min=float("-inf"), w_max=float("inf"),
+        use_kernel=use_kernel, interpret=interpret)

@@ -29,7 +29,7 @@ from repro.distributed.sharding import (batch_axes, decode_cache_shardings,
 from repro.models import transformer
 from repro.serve.serving import ServeConfig, init_cache, make_serve_step
 from repro.train.optimizer import OptimizerConfig, OptState, init_opt_state
-from repro.train.train_step import TrainConfig, lm_loss, make_train_step
+from repro.train.train_step import TrainConfig, make_train_step
 
 SDS = jax.ShapeDtypeStruct
 

@@ -5,29 +5,88 @@ synthetic-token LM run with the full production control loop — sharded
 init, jitted train step, async checkpointing, restart-on-failure,
 straggler watchdog.  For the paper's own SNN training path use
 ``examples/train_snn.py`` (the learning-engine loop has no gradients).
+
+``--engine`` switches to the ITP-STDP learning-engine workload: a
+population of engine replicas trained on random rasters with the
+selectable weight-update backend (``--backend reference|fused|
+fused_interpret``), reporting synaptic-op throughput — the launcher path
+for exercising the fused Pallas datapath end-to-end.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.data import LMBatchSpec, lm_batches
 from repro.distributed.fault_tolerance import (FailureInjector, RunnerConfig,
                                                TrainingRunner)
 from repro.distributed.sharding import use_mesh
+from repro.kernels.itp_stdp.ops import BACKENDS
 from repro.launch.mesh import describe, make_debug_mesh
 from repro.train import (OptimizerConfig, TrainConfig, init_training,
                          make_train_step)
 
 
+def run_engine_training(args) -> dict:
+    """Population ITP-STDP training on the selected weight-update backend.
+
+    Trains ``--replicas`` independent engine replicas for ``--steps`` steps
+    on Bernoulli rasters and reports wall-clock + synaptic-op throughput.
+    Returns the summary dict (also printed) so tests can call this directly.
+    """
+    from repro.core.engine import (EngineConfig, init_engine_population,
+                                   run_engine_population)
+
+    cfg = EngineConfig(n_pre=args.engine_pre, n_post=args.engine_post,
+                       backend=args.backend)
+    key = jax.random.PRNGKey(0)
+    states = init_engine_population(key, cfg, args.replicas)
+    trains = jax.random.bernoulli(
+        jax.random.fold_in(key, 1), args.engine_rate,
+        (args.replicas, args.steps, cfg.n_pre))
+
+    run = jax.jit(lambda s, x: run_engine_population(s, x, cfg))
+    t0 = time.time()
+    states, post = jax.block_until_ready(run(states, trains))
+    compile_s = time.time() - t0
+    t0 = time.time()
+    states, post = jax.block_until_ready(run(states, trains))
+    run_s = time.time() - t0
+
+    sops = args.replicas * args.steps * cfg.n_pre * cfg.n_post
+    summary = {
+        "backend": args.backend,
+        "replicas": args.replicas,
+        "n_pre": cfg.n_pre, "n_post": cfg.n_post, "steps": args.steps,
+        "compile_seconds": round(compile_s, 3),
+        "run_seconds": round(run_s, 4),
+        "sops_per_s": sops / max(run_s, 1e-9),
+        "mean_post_rate": float(post.mean()),
+    }
+    print(f"engine training [{args.backend}]: {args.replicas} replicas × "
+          f"{cfg.n_pre}×{cfg.n_post} × {args.steps} steps — "
+          f"{summary['sops_per_s']:.3e} SOP/s "
+          f"(compile {compile_s:.2f}s, run {run_s:.3f}s, "
+          f"mean post rate {summary['mean_post_rate']:.3f})", flush=True)
+    return summary
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen3-0.6b")
+    ap.add_argument("--engine", action="store_true",
+                    help="train the ITP-STDP learning engine instead of the "
+                         "LM stack")
+    ap.add_argument("--backend", default="reference", choices=BACKENDS,
+                    help="engine weight-update datapath (--engine mode)")
+    ap.add_argument("--engine-pre", type=int, default=256)
+    ap.add_argument("--engine-post", type=int, default=256)
+    ap.add_argument("--replicas", type=int, default=8)
+    ap.add_argument("--engine-rate", type=float, default=0.3,
+                    help="Bernoulli input spike rate (--engine mode)")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-runnable)")
     ap.add_argument("--steps", type=int, default=100)
@@ -46,6 +105,10 @@ def main():
     ap.add_argument("--inject-failure-at", type=int, default=-1)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
+
+    if args.engine:
+        run_engine_training(args)
+        return
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     opt_cfg = OptimizerConfig(lr=args.lr, total_steps=args.steps,

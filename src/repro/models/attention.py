@@ -11,13 +11,12 @@ peak memory is O(block_q · block_kv) per head instead of O(S²).
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
-from repro.models.layers import (Params, apply_rope, cdtype, dense_init,
+from repro.models.layers import (Params, apply_rope, dense_init,
                                  pdtype, rms_head_norm)
 
 NEG_INF = -1e30

@@ -21,17 +21,19 @@ learning engine: ``exact``/``itp`` read the history against e^(-k/τ) ≡
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
-from typing import Any, NamedTuple, Sequence
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.history import SpikeHistory, as_register, init_history, push
-from repro.core.lif import (IzhikevichParams, IzhikevichState, LIFParams,
-                            LIFState, izhikevich_init, izhikevich_step,
-                            lif_init, lif_step)
+from repro.core.history import (SpikeHistory, as_register, init_history,
+                                push, registers_depth_major)
+from repro.core.lif import (IzhikevichParams, LIFParams, izhikevich_init,
+                            izhikevich_step, lif_init, lif_step)
 from repro.core.stdp import STDPParams, po2_weights
+from repro.kernels.itp_stdp.ops import resolve_backend, synapse_delta
 
 
 # ---------------------------------------------------------------------------
@@ -61,11 +63,21 @@ class SNNConfig:
     izhi_gain: float = 20.0       # current scale into the Izhikevich model
     w_bits: int = 8
     quantise: bool = True
+    backend: str = "reference"    # reference | fused | fused_interpret
     inhibition: float = 0.0       # lateral inhibition strength (2-layer SNN)
     stdp: STDPParams = dataclasses.field(default_factory=STDPParams)
     lif: LIFParams = dataclasses.field(
         default_factory=lambda: LIFParams(tau=2.0, v_th=0.6))
     izhi: IzhikevichParams = dataclasses.field(default_factory=IzhikevichParams)
+
+    def __post_init__(self):
+        resolve_backend(self.backend)   # validates against BACKENDS
+        if self.backend != "reference" and any(
+                s.kind.startswith("conv") for s in self.layers):
+            warnings.warn(
+                f"backend={self.backend!r}: conv layers have no fused "
+                "datapath yet and fall back to the reference update; only "
+                "fc layers run the Pallas kernel", stacklevel=2)
 
     @property
     def compensate(self) -> bool:
@@ -249,6 +261,32 @@ def _quantise(w: jax.Array, cfg: SNNConfig) -> jax.Array:
     return jnp.round(w * levels) / levels
 
 
+def _fused_fc_delta(cfg: SNNConfig, st: "LayerState", s_in: jax.Array,
+                    s_out: jax.Array) -> jax.Array:
+    """Batch-summed Δw for an fc layer via the fused Pallas kernel.
+
+    The fc layer is the engine's dense synapse matrix replicated over the
+    batch: per sample the update is the same XOR-gated rank-1 outer product
+    the kernel fuses, so we vmap the Δw read over the batch and accumulate.
+    Equivalent to the reference einsum path (tests/test_backend.py).
+    """
+    B = s_in.shape[0]
+    pre = s_in.reshape(B, -1)                       # (B, fan_in)
+    post = s_out.reshape(B, -1)                     # (B, n_out)
+    _, interpret = resolve_backend(cfg.backend)
+    # histories are stored flat over (B · n); view per-sample depth-major
+    pre_bits = registers_depth_major(st.pre_hist).reshape(
+        cfg.depth, B, -1).transpose(1, 0, 2)        # (B, depth, fan_in)
+    post_bits = registers_depth_major(st.post_hist).reshape(
+        cfg.depth, B, -1).transpose(1, 0, 2)        # (B, depth, n_out)
+
+    def one(p, q, pb, qb):
+        return synapse_delta(p, q, pb, qb, cfg.stdp, pairing=cfg.pairing,
+                             compensate=cfg.compensate, interpret=interpret)
+
+    return jax.vmap(one)(pre, post, pre_bits, post_bits).sum(axis=0)
+
+
 # ---------------------------------------------------------------------------
 # Layer steps
 # ---------------------------------------------------------------------------
@@ -328,7 +366,14 @@ def _learnable_step(spec: SNNLayerSpec, cfg: SNNConfig, w: jax.Array,
     s_out = spikes_out.astype(jnp.float32)
 
     # --- ITP-STDP update --------------------------------------------------
-    if train:
+    if train and cfg.backend != "reference" and spec.kind == "fc":
+        # fused engine datapath: per-sample Δw from the Pallas kernel,
+        # batch-accumulated, then the same clip + quantise as the reference
+        dw = _fused_fc_delta(cfg, st, s_in, s_out)
+        denom = float(B)                               # P = 1 for fc
+        w = jnp.clip(w + cfg.eta * dw / denom, 0.0, 1.0)
+        w = _quantise(w, cfg)
+    elif train:
         ltp = _hist_magnitude(st.pre_hist, spikes_in.shape, cfg.stdp.a_plus,
                               cfg.stdp.tau_plus, cfg)      # (B,*in)
         ltd = _hist_magnitude(st.post_hist, out_shape, cfg.stdp.a_minus,

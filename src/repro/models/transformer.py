@@ -16,7 +16,6 @@ Decode threads per-layer KV/SSM caches through the same scans as xs/ys.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

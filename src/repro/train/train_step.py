@@ -16,7 +16,6 @@ entirely and GSPMD reduces over ``data`` as usual.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable
 
 import jax

@@ -1,0 +1,129 @@
+"""Hermetic stand-in for ``hypothesis`` (property-based testing).
+
+The test-suite uses a small slice of the hypothesis API (``@given`` with
+keyword strategies, ``@settings``, ``st.floats/integers/lists/data``).  When
+the real package is installed we re-export it unchanged; otherwise a minimal
+deterministic fallback runs each property over a fixed set of examples
+(range edges first, then seeded-pseudorandom draws) so the suite collects
+and runs with no network and no extra dependencies.
+
+The fallback is intentionally simple: it does no shrinking, no example
+database, and caps the number of examples regardless of
+``settings(max_examples=...)`` — it is a smoke-level property check, not a
+replacement for real hypothesis runs in CI.
+"""
+from __future__ import annotations
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 8
+
+    class _Strategy:
+        """A value source: fixed edge examples first, then seeded draws."""
+
+        def __init__(self, draw, edges=()):
+            self._draw = draw
+            self.edges = tuple(edges)
+
+        def sample(self, rng, index=None):
+            if index is not None and index < len(self.edges):
+                return self.edges[index]
+            return self._draw(rng)
+
+    class _DataStrategy:
+        """Marker for ``st.data()``; materialised per-example as ``_Data``."""
+
+    class _Data:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.sample(self._rng)
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value=-1e9, max_value=1e9, *, allow_nan=True,
+                   allow_infinity=None, width=64):
+            edges = [min_value, max_value, (min_value + max_value) / 2.0]
+            if min_value <= 0.0 <= max_value:
+                edges.append(0.0)
+            return _Strategy(
+                lambda rng: rng.uniform(min_value, max_value), edges)
+
+        @staticmethod
+        def integers(min_value, max_value):
+            edges = [min_value, max_value, (min_value + max_value) // 2]
+            return _Strategy(
+                lambda rng: rng.randint(min_value, max_value), edges)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5, (False, True))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements), elements[:2])
+
+        @staticmethod
+        def lists(elements, *, min_size=0, max_size=None):
+            hi = max_size if max_size is not None else min_size + 8
+
+            def draw(rng):
+                size = rng.randint(min_size, hi)
+                return [elements.sample(rng) for _ in range(size)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _Strategies()
+
+    def settings(max_examples=None, deadline=None, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            passthrough = [p for name, p in sig.parameters.items()
+                           if name not in strategies]
+
+            def wrapper(*args, **kwargs):
+                limit = getattr(wrapper, "_compat_max_examples", None)
+                n = min(limit or _FALLBACK_EXAMPLES, _FALLBACK_EXAMPLES)
+                for i in range(n):
+                    rng = random.Random(f"{fn.__module__}.{fn.__name__}:{i}")
+                    drawn = {}
+                    for name, strat in strategies.items():
+                        if isinstance(strat, _DataStrategy):
+                            drawn[name] = _Data(rng)
+                        else:
+                            drawn[name] = strat.sample(rng, i)
+                    fn(*args, **kwargs, **drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            # pytest reads the signature to resolve fixtures: expose only the
+            # parameters *not* supplied by strategies
+            wrapper.__signature__ = sig.replace(parameters=passthrough)
+            return wrapper
+
+        return deco

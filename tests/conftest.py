@@ -11,3 +11,6 @@ def key():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    config.addinivalue_line(
+        "markers",
+        "multidevice: forced-8-device subprocess test (see ROADMAP)")

@@ -1,5 +1,4 @@
 """Synthetic data generators + the spike-encoding pipeline."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

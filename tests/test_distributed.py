@@ -12,15 +12,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax.sharding import Mesh, PartitionSpec as P
+from _hypothesis_compat import given, settings, st
+from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config, get_smoke_config
+from repro.configs import get_config
 from repro.distributed.compression import compression_error
 from repro.distributed.sharding import (kv_cache_spec, logical_to_spec,
                                         param_spec_for)
-from repro.kernels.po2_quant.ref import (po2_decode_ref, po2_encode_ref,
-                                         po2_roundtrip_ref)
+from repro.kernels.po2_quant.ref import po2_encode_ref, po2_roundtrip_ref
 
 
 class FakeMesh:
@@ -165,6 +164,7 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_pod_mean_semantics_multidevice():
     r = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
                        capture_output=True, text=True, timeout=300,
@@ -208,6 +208,7 @@ SHARDED_TRAIN_SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_sharded_train_single_vs_multipod():
     r = subprocess.run([sys.executable, "-c", SHARDED_TRAIN_SCRIPT],
                        capture_output=True, text=True, timeout=560,
@@ -282,6 +283,7 @@ SHARDED_ENGINE_SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_sharded_engine_matches_reference():
     """The paper's engine, 2-D weight-sharded over 8 devices, is bit-
     compatible with the single-device reference (DESIGN.md §4.1)."""

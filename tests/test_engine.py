@@ -2,12 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import history as H
-from repro.core.engine import (EngineConfig, EngineState, engine_step,
-                               init_engine, prototype_engine, run_engine)
-from repro.core.lif import LIFParams
+from repro.core.engine import (EngineConfig, init_engine,
+                               prototype_engine, run_engine)
 
 
 def test_prototype_is_4x4(key):
@@ -55,7 +53,7 @@ def test_engine_compensated_itp_equals_exact_semantics(key):
     st_a, post_a = run_engine(st, train, cfg_itp)
     # manually run with explicit exp(-k/τ) readout
     from repro.core.stdp import synapse_update
-    from repro.core.lif import lif_init, lif_step
+    from repro.core.lif import lif_step
 
     w = st.w
     pre_h, post_h = st.pre_hist, st.post_hist

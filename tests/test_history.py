@@ -1,8 +1,7 @@
 """Bitplane spike-history ring buffer vs the naive shift-register model."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.history import (as_register, fixed_point_value, init_history,
                                 pack_words, push, unpack_words)

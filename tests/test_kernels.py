@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.history import init_history, push
 from repro.core.lif import LIFParams, LIFState, lif_init, lif_step
@@ -24,7 +24,11 @@ def _random_setup(key, n_pre, n_post, depth):
     return w, pre_s, post_s, pre_h, post_h
 
 
-@pytest.mark.parametrize("n_pre,n_post", [(128, 128), (256, 128), (512, 384)])
+@pytest.mark.parametrize("n_pre,n_post", [
+    (128, 128),
+    pytest.param(256, 128, marks=pytest.mark.slow),
+    pytest.param(512, 384, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("nearest", [True, False])
 @pytest.mark.parametrize("depth", [7, 8])
 def test_itp_stdp_kernel_vs_ref(key, n_pre, n_post, nearest, depth):
@@ -74,7 +78,11 @@ def test_engine_weight_update_matches_core(key):
 # LIF kernel
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("b,n", [(1, 128), (8, 512), (3, 100), (16, 1024)])
+@pytest.mark.parametrize("b,n", [
+    (1, 128), (3, 100),
+    pytest.param(8, 512, marks=pytest.mark.slow),
+    pytest.param(16, 1024, marks=pytest.mark.slow),
+])
 def test_lif_kernel_vs_ref(key, b, n):
     from repro.kernels.lif.ops import lif_step_kernel
     p = LIFParams(tau=2.0, v_th=0.7)
@@ -120,7 +128,8 @@ def test_po2_roundtrip_properties(x):
             assert m == 0.5
 
 
-@pytest.mark.parametrize("n", [128, 500, 4096])
+@pytest.mark.parametrize("n", [
+    128, 500, pytest.param(4096, marks=pytest.mark.slow)])
 def test_po2_kernel_vs_ref(key, n):
     from repro.kernels.po2_quant.kernel import po2_decode, po2_encode
     from repro.kernels.po2_quant.ref import po2_decode_ref, po2_encode_ref

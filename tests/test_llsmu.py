@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.llsmu import (floor_log2, llsmu_fixed, llsmu_signed,
                               mitchell_fixed, mitchell_float, relative_error)
@@ -30,6 +30,7 @@ def test_mitchell_error_bound():
     assert float(jnp.mean(rel)) < 0.03
 
 
+@pytest.mark.slow
 def test_mitchell_fixed_matches_float_shadow():
     """Fixed-point truncation adds error only at small mantissa products."""
     x = jnp.arange(1, 200)
@@ -42,6 +43,7 @@ def test_mitchell_fixed_matches_float_shadow():
     assert float(jnp.max(rel)) < 0.10   # small products, truncating shifts
 
 
+@pytest.mark.slow
 def test_llsmu_8bit_error():
     """8×8-bit LLSMu: the Karatsuba cross term (m2−m0−m1) lets Mitchell
     errors cancel or stack — tiny products can be off by ~half their value
@@ -80,7 +82,11 @@ def test_llsmu_zero_identity():
 # Pallas kernel vs oracle
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("n", [100, 128, 256, 384])
+@pytest.mark.parametrize("n", [
+    100, 128,
+    pytest.param(256, marks=pytest.mark.slow),
+    pytest.param(384, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("nbits", [3, 4])
 def test_llsmu_kernel_matches_ref(key, n, nbits):
     """Kernel vs oracle, bit-exact, odd + lane-aligned sizes, signed."""

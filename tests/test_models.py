@@ -10,7 +10,13 @@ from repro.configs import ARCH_NAMES, get_config, get_smoke_config, shapes_for
 from repro.models import attention as attn
 from repro.models import kvcache as kvc
 from repro.models import transformer
-from repro.models.config import ModelConfig
+
+
+# tier-1 keeps one representative small arch per smoke family; the full
+# per-arch sweep is tier-2 (@slow)
+FAST_ARCH = "qwen3-0.6b"
+ARCH_PARAMS = [pytest.param(a, marks=[] if a == FAST_ARCH else
+                            [pytest.mark.slow]) for a in ARCH_NAMES]
 
 
 def _vis_kw(cfg, B):
@@ -23,7 +29,7 @@ def _vis_kw(cfg, B):
 # Per-arch smoke tests (reduced configs, per the brief)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_arch_smoke_forward(key, arch):
     cfg = get_smoke_config(arch)
     params = transformer.init_model(key, cfg)
@@ -35,7 +41,7 @@ def test_arch_smoke_forward(key, arch):
     assert not np.isnan(np.asarray(logits, np.float32)).any()
 
 
-@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_arch_smoke_train_step(key, arch):
     """One forward/train step on CPU: shapes + finite loss + finite grads."""
     from repro.train import OptimizerConfig, TrainConfig, make_train_step
@@ -63,7 +69,7 @@ def test_arch_smoke_train_step(key, arch):
     assert all(np.isfinite(m) for m in moved)
 
 
-@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_arch_smoke_decode(key, arch):
     cfg = get_smoke_config(arch)
     params = transformer.init_model(key, cfg)
@@ -78,6 +84,7 @@ def test_arch_smoke_decode(key, arch):
     assert not np.isnan(np.asarray(logits, np.float32)).any()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-1.3b", "hymba-1.5b",
                                   "musicgen-medium"])
 def test_decode_matches_forward(key, arch):
@@ -105,6 +112,7 @@ def test_decode_matches_forward(key, arch):
     assert corr > 0.98
 
 
+@pytest.mark.slow
 def test_unroll_matches_scan(key):
     cfg = get_smoke_config("qwen3-0.6b")
     params = transformer.init_model(key, cfg)
@@ -149,7 +157,8 @@ def _naive_attention(q, k, v, window=0):
 
 
 @pytest.mark.parametrize("window", [0, 8])
-@pytest.mark.parametrize("S,bq", [(32, 16), (64, 16)])
+@pytest.mark.parametrize("S,bq", [
+    (32, 16), pytest.param(64, 16, marks=pytest.mark.slow)])
 def test_blockwise_attention_matches_naive(key, window, S, bq):
     B, H, K, hd = 2, 4, 2, 16
     ks = jax.random.split(key, 3)
@@ -222,6 +231,7 @@ def test_kv_int8_roundtrip_error(key):
     assert rel < 0.01
 
 
+@pytest.mark.slow
 def test_int8_decode_close_to_bf16(key):
     cfg = get_smoke_config("yi-9b")
     params = transformer.init_model(key, cfg)
@@ -272,6 +282,7 @@ def test_shapes_for_respects_long_context():
             assert "long_500k" not in names
 
 
+@pytest.mark.slow
 def test_hybrid_decode_degenerate_layer_mixes(key):
     """Reduced hymba configs with no global (or no SWA) layers decode —
     the extrapolation instrument depends on these (launch/extrapolate)."""

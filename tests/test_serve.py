@@ -22,6 +22,7 @@ def test_serve_step_shapes(key):
     assert cache2.kv.k.shape == cache.kv.k.shape
 
 
+@pytest.mark.slow
 def test_prefill_matches_stepwise(key):
     cfg = get_smoke_config("qwen3-0.6b")
     params = transformer.init_model(key, cfg)

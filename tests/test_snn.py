@@ -9,6 +9,7 @@ from repro.data import encode_batch, synthetic_digits, synthetic_fault
 from repro.models import snn
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("maker,sampler", [
     (snn.mnist_2layer, lambda k, n: synthetic_digits(k, n)),
     (snn.fmnist_dcsnn, lambda k, n: synthetic_digits(k, n)),

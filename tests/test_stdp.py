@@ -4,8 +4,7 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.stdp import (RULES, STDPParams, a2a_delta_from_history,
                              exact_stdp, imstdp, itp_stdp, linear_stdp,
