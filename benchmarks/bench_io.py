@@ -1,0 +1,36 @@
+"""Shared read-modify-write helper for the tracked BENCH_*.json artifacts.
+
+Multiple benchmark modules contribute sections to the same repo-root
+trajectory file (the dense engine grid and the conv grid both land in
+BENCH_engine.json); each merges only its own top-level keys and leaves the
+siblings in place, so ``--only`` runs never clobber another module's
+numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def update_bench_json(name: str, updates: dict) -> str:
+    """Merge ``updates`` into the repo-root file ``name``; returns the path.
+
+    The write is atomic (temp file + rename) so a killed run can never
+    leave a truncated trajectory behind; an unreadable pre-existing file
+    still fails loudly rather than being silently reset, since it holds
+    the sibling modules' sections.
+    """
+    path = os.path.join(REPO_ROOT, name)
+    data: dict = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data.update(updates)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1)
+    os.replace(tmp, path)
+    return path

@@ -1,0 +1,135 @@
+"""Benchmark: reference vs fused im2col conv ITP-STDP update throughput.
+
+The conv layers are where the FLOP bulk of the paper's two conv networks
+(6-layer DCSNN, 5-layer CSNN) lives.  This grid times the patch-level
+weight update — the pure-jnp reference against the fused Pallas kernel
+(interpret mode on CPU, the compiled kernel on an accelerator) — on the
+exact conv-layer shapes of those networks, and appends the result to the
+tracked BENCH_engine.json trajectory next to the dense engine grid.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_io import update_bench_json
+from benchmarks.engine_cost import fused_backend_name
+from repro.core.stdp import STDPParams
+from repro.kernels.itp_stdp.ops import resolve_backend
+from repro.kernels.itp_stdp_conv.ops import conv_synapse_delta
+
+DEPTH = 7
+
+# (name, patch rows per sample, patch width K, out channels C): the conv
+# layer shapes of the paper's DCSNN (28x28 images) and CSNN (512-sample
+# series) stacks; M = batch x rows is the contracted axis.
+LAYER_SHAPES = (
+    ("dcsnn-conv1", 576, 25, 12),
+    ("dcsnn-conv2", 100, 108, 24),
+    ("csnn-conv1", 253, 14, 8),
+    ("csnn-conv2", 61, 40, 16),
+)
+
+
+def measure_conv_update(
+    m: int,
+    kk: int,
+    cc: int,
+    backend: str,
+    t_steps: int,
+    seed: int = 0,
+) -> float:
+    """Best wall-clock of a jitted t_steps scan of the conv weight update."""
+    use_kernel, interpret = resolve_backend(backend)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    pre = jax.random.bernoulli(ks[0], 0.3, (t_steps, m, kk))
+    post = jax.random.bernoulli(ks[1], 0.2, (t_steps, m, cc))
+    pre_bits = jax.random.bernoulli(ks[2], 0.3, (t_steps, DEPTH, m, kk))
+    post_bits = jax.random.bernoulli(ks[3], 0.2, (t_steps, DEPTH, m, cc))
+    params = STDPParams()
+
+    def step(w, xs):
+        p, q, pb, qb = xs
+        dw = conv_synapse_delta(
+            p, q, pb, qb, params, use_kernel=use_kernel, interpret=interpret
+        )
+        return jnp.clip(w + dw / float(m), 0.0, 1.0), None
+
+    @jax.jit
+    def run_scan(w):
+        out, _ = jax.lax.scan(step, w, (pre, post, pre_bits, post_bits))
+        return out
+
+    w0 = jnp.full((kk, cc), 0.5, jnp.float32)
+    jax.block_until_ready(run_scan(w0))  # compile + warm
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run_scan(w0))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(out_dir: str = "experiments/bench", verbose: bool = True, quick: bool = False) -> dict:
+    t_steps, batch = (8, 2) if quick else (25, 8)
+    fused_name = fused_backend_name()
+    rows = []
+    for name, m, kk, cc in LAYER_SHAPES:
+        rows_m = m * batch
+        ref_s = measure_conv_update(rows_m, kk, cc, "reference", t_steps)
+        fused_s = measure_conv_update(rows_m, kk, cc, fused_name, t_steps)
+        sops = rows_m * kk * cc * t_steps
+        rows.append(
+            {
+                "layer": name,
+                "patch_rows": rows_m,
+                "patch_width": kk,
+                "out_channels": cc,
+                "t_steps": t_steps,
+                "fused_backend": fused_name,
+                "reference_sops_per_s": sops / ref_s,
+                "fused_sops_per_s": sops / fused_s,
+                "fused_speedup": ref_s / fused_s,
+            }
+        )
+
+    out = {"grid": rows, "quick": quick}
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "conv_cost.json"), "w") as f:
+        json.dump(out, f)
+    # merge into the tracked engine trajectory file (quick runs use the
+    # smaller, incomparable grid and land in the gitignored .quick twin)
+    bench_name = "BENCH_engine.quick.json" if quick else "BENCH_engine.json"
+    update_bench_json(
+        bench_name,
+        {
+            "conv": {
+                "benchmark": "conv_backend_throughput",
+                "unit": "SOP/s",
+                "quick": quick,
+                "fused_backend": fused_name,
+                "grid": rows,
+            }
+        },
+    )
+    if verbose:
+        print("— conv update cost (im2col-fused ITP-STDP kernel) —")
+        for r in rows:
+            print(
+                f"  {r['layer']:12s} M={r['patch_rows']:5d} "
+                f"K={r['patch_width']:4d} C={r['out_channels']:3d}: "
+                f"ref {r['reference_sops_per_s']:.3e} SOP/s  "
+                f"fused {r['fused_sops_per_s']:.3e} SOP/s  "
+                f"x{r['fused_speedup']:.2f}"
+            )
+        print(f"  → {bench_name} (conv section, {len(rows)} grid cells)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

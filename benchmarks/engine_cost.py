@@ -23,13 +23,12 @@ import time
 
 import jax
 
+from benchmarks.bench_io import update_bench_json
 from repro.core.baseline import (CounterEngineConfig, init_counter_engine,
                                  run_counter_engine)
 from repro.core.engine import (EngineConfig, init_engine,
                                init_engine_population, run_engine,
                                run_engine_population)
-
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # ---------------------------------------------------------------------------
 # 1. Op/bit-count model (per synaptic weight update, nearest-neighbour)
@@ -172,14 +171,15 @@ def run(out_dir: str = "experiments/bench", verbose: bool = True,
     # throughput per (size, batch) cell — the first point every later
     # scaling PR appends to.  --quick runs use a smaller, incomparable
     # grid, so they write a separate (gitignored) file rather than
-    # clobbering the tracked trajectory.
+    # clobbering the tracked trajectory.  Merged, not overwritten: the
+    # conv grid (benchmarks/conv_cost.py) shares the same file.
     bench_name = "BENCH_engine.quick.json" if quick else "BENCH_engine.json"
-    with open(os.path.join(REPO_ROOT, bench_name), "w") as f:
-        json.dump({"benchmark": "engine_backend_throughput",
-                   "unit": "SOP/s",
-                   "quick": quick,
-                   "fused_backend": fused_backend_name(),
-                   "grid": backend_grid}, f, indent=1)
+    update_bench_json(bench_name,
+                      {"benchmark": "engine_backend_throughput",
+                       "unit": "SOP/s",
+                       "quick": quick,
+                       "fused_backend": fused_backend_name(),
+                       "grid": backend_grid})
     if verbose:
         print("— engine cost model (paper Tables III-V analogue) —")
         hdr = f"  {'variant':24s} {'exp':>4s} {'mul':>4s} {'amul':>5s} " \

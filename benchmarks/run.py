@@ -5,6 +5,7 @@ One module per paper table/figure (DESIGN.md §7):
     isi               — Fig. 6 ISI histogram + depth-7 coverage
     network_accuracy  — Table II accuracy parity (3 nets × 3 rules)
     engine_cost       — Tables III-V op/bit model + measured SOP/s
+    conv_cost         — im2col-fused conv update: reference vs Pallas grid
     roofline          — §Roofline terms from the dry-run artifacts
 
 ``--only <name>`` runs a single module; ``--quick`` shrinks the
@@ -21,7 +22,8 @@ import time
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=("drift", "isi", "network_accuracy",
-                                       "engine_cost", "roofline"))
+                                       "engine_cost", "conv_cost",
+                                       "roofline"))
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args()
@@ -67,6 +69,14 @@ def main():
             "seconds": round(time.time() - t0, 1),
             "speedups": [t["speedup"] for t in r["throughput"]],
             "fused_speedups": [c["fused_speedup"] for c in r["backend_grid"]]}
+        print()
+    if want("conv_cost"):
+        from benchmarks import conv_cost
+        t0 = time.time()
+        r = conv_cost.run(args.out, quick=args.quick)
+        summary["conv_cost"] = {
+            "seconds": round(time.time() - t0, 1),
+            "fused_speedups": [c["fused_speedup"] for c in r["grid"]]}
         print()
     if want("roofline"):
         from benchmarks import roofline

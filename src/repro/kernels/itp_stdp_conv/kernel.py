@@ -1,0 +1,141 @@
+"""Fused im2col ITP-STDP conv-update Pallas kernel.
+
+The conv layers apply the pair-based STDP rule per (patch element ->
+output channel) synapse, accumulated over batch and spatial positions
+(src/repro/models/snn.py).  After im2col the whole update collapses to
+
+    dw[k, c] = sum_m (1 - pre[m, k]) * ltp_mag[m, k] * post[m, c]
+             - sum_m pre[m, k] * (1 - post[m, c]) * ltd_mag[m, c]
+
+where m runs over the M = batch x positions patch rows and the LTP/LTD
+magnitudes are the po2 reads of the spike-history bitplanes — two MXU
+matmuls contracting the large M axis, fused with the history read and the
+pair gating in one pass.
+
+Layout choices (HW-codesign reasoning, mirroring the dense itp_stdp
+kernel):
+  * the patch rows M sit on the grid + sublane axis; the small patch
+    width K and channel count C are padded to the 128-lane boundary by
+    ops.py, so both matmuls are MXU-aligned;
+  * bitplanes arrive depth-major (depth, TM, K): the po2 read is a
+    length-depth reduction over the leading axis, kept entirely in VREGs;
+  * the (K, C) delta tile stays resident in VMEM across the whole grid —
+    each grid step accumulates its tile's two dot products into it, so the
+    weight delta makes exactly one HBM round-trip.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_stdp_kernel(
+    pre_ref,
+    post_ref,
+    pre_bits_ref,
+    post_bits_ref,
+    po2_ltp_ref,
+    po2_ltd_ref,
+    out_ref,
+    *,
+    nearest: bool,
+):
+    pre = pre_ref[...].astype(jnp.float32)  # (TM, K)
+    post = post_ref[...].astype(jnp.float32)  # (TM, C)
+    pre_bits = pre_bits_ref[...].astype(jnp.float32)  # (depth, TM, K)
+    post_bits = post_bits_ref[...].astype(jnp.float32)  # (depth, TM, C)
+
+    if nearest:
+        # Fig. 11 MSB mask: keep only the first '1' scanning most-recent-first
+        pre_bits = pre_bits * (jnp.cumsum(pre_bits, axis=0) == 1.0)
+        post_bits = post_bits * (jnp.cumsum(post_bits, axis=0) == 1.0)
+
+    # po2 read: reduce the depth axis against the place-value vector — the
+    # 'register read IS the weight update' step, per patch element
+    depth = pre_bits.shape[0]
+    po2_ltp = po2_ltp_ref[...].reshape(depth, 1, 1)
+    po2_ltd = po2_ltd_ref[...].reshape(depth, 1, 1)
+    ltp_mag = jnp.sum(po2_ltp * pre_bits, axis=0)  # (TM, K)
+    ltd_mag = jnp.sum(po2_ltd * post_bits, axis=0)  # (TM, C)
+
+    # XOR/AND pair gate: potentiate where post fired alone, depress where
+    # pre fired alone; contract the patch-row axis on the MXU
+    contract = (((0,), (0,)), ((), ()))
+    ltp_term = (1.0 - pre) * ltp_mag  # (TM, K)
+    ltd_term = (1.0 - post) * ltd_mag  # (TM, C)
+    dw_ltp = jax.lax.dot_general(ltp_term, post, contract, preferred_element_type=jnp.float32)
+    dw_ltd = jax.lax.dot_general(pre, ltd_term, contract, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += dw_ltp - dw_ltd
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nearest", "tile_m", "interpret"),
+)
+def itp_stdp_conv_delta(
+    pre_patches: jax.Array,
+    post_spikes: jax.Array,
+    pre_bits: jax.Array,
+    post_bits: jax.Array,
+    po2_ltp: jax.Array,
+    po2_ltd: jax.Array,
+    *,
+    nearest: bool = True,
+    tile_m: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Patch-level fused ITP-STDP conv weight delta.
+
+    Args:
+      pre_patches: (M, K) im2col spike patches, M = batch x output positions.
+      post_spikes: (M, C) current-step output spikes.
+      pre_bits:    (depth, M, K) bitplane patches, k=0 row most recent.
+      post_bits:   (depth, M, C) output bitplanes.
+      po2_ltp:     (depth,) LTP read vector (A+ amplitude folded in).
+      po2_ltd:     (depth,) LTD read vector (A- amplitude folded in).
+      nearest:     nearest-neighbour (True) or all-to-all (False) pairing.
+      tile_m:      patch rows per grid step; must divide M.
+      interpret:   run through the Pallas interpreter (CPU validation);
+                   False targets real TPU hardware.
+
+    Returns the (K, C) float32 delta accumulated over all M patch rows.
+    """
+    m, kk = pre_patches.shape
+    cc = post_spikes.shape[1]
+    depth = pre_bits.shape[0]
+    tm = min(tile_m, m)
+    if m % tm:
+        raise ValueError(f"tile_m={tm} must divide M={m}")
+
+    kern = functools.partial(_conv_stdp_kernel, nearest=nearest)
+    return pl.pallas_call(
+        kern,
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, kk), lambda i: (i, 0)),  # pre patches
+            pl.BlockSpec((tm, cc), lambda i: (i, 0)),  # post spikes
+            pl.BlockSpec((depth, tm, kk), lambda i: (0, i, 0)),  # pre bitplanes
+            pl.BlockSpec((depth, tm, cc), lambda i: (0, i, 0)),  # post bitplanes
+            pl.BlockSpec((1, depth), lambda i: (0, 0)),  # po2 LTP read vector
+            pl.BlockSpec((1, depth), lambda i: (0, 0)),  # po2 LTD read vector
+        ],
+        out_specs=pl.BlockSpec((kk, cc), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kk, cc), jnp.float32),
+        interpret=interpret,
+    )(
+        pre_patches.astype(jnp.float32),
+        post_spikes.astype(jnp.float32),
+        pre_bits.astype(jnp.float32),
+        post_bits.astype(jnp.float32),
+        po2_ltp.reshape(1, depth).astype(jnp.float32),
+        po2_ltd.reshape(1, depth).astype(jnp.float32),
+    )

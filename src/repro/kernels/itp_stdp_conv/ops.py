@@ -1,0 +1,120 @@
+"""Public wrappers for the fused im2col ITP-STDP conv kernel.
+
+Bridges model-level state (im2col spike patches + depth-major bitplane
+registers, STDPParams) to the raw Pallas kernel, padding the small patch
+and channel axes to lane multiples and the patch-row axis to a tile
+multiple.  Zero padding is exact here: padded rows and columns carry no
+spikes and no history bits, so every gated term they contribute is zero.
+
+:func:`conv_synapse_delta` mirrors ``repro.kernels.itp_stdp.ops.
+synapse_delta`` — it returns the raw (K, C) delta so callers own the
+batch normalisation, clip, and quantisation.  :func:`im2col_2d` /
+:func:`im2col_1d` are the shared patch extractors the SNN conv layers use
+for both the spike and the bitplane inputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stdp import STDPParams, po2_weights
+from repro.kernels.itp_stdp_conv.kernel import itp_stdp_conv_delta
+from repro.kernels.itp_stdp_conv.ref import itp_stdp_conv_delta_ref
+
+LANE = 128
+SUBLANE = 8
+
+
+def im2col_2d(x: jax.Array, k: int, stride: int) -> jax.Array:
+    """(B, H, W, C) -> (B, Ho, Wo, k*k*C) im2col patches."""
+    B, H, W, C = x.shape
+    p = jax.lax.conv_general_dilated_patches(
+        x.transpose(0, 3, 1, 2), (k, k), (stride, stride), "VALID"
+    )
+    # p: (B, C*k*k, Ho, Wo) with feature order (C, kh, kw)
+    Ho, Wo = p.shape[2], p.shape[3]
+    p = p.reshape(B, C, k * k, Ho, Wo).transpose(0, 3, 4, 2, 1)
+    return p.reshape(B, Ho, Wo, k * k * C)
+
+
+def im2col_1d(x: jax.Array, k: int, stride: int) -> jax.Array:
+    """(B, L, C) -> (B, Lo, k*C) im2col patches."""
+    B, L, C = x.shape
+    p = jax.lax.conv_general_dilated_patches(
+        x.transpose(0, 2, 1)[..., None], (k, 1), (stride, 1), "VALID"
+    )
+    Lo = p.shape[2]
+    p = p.reshape(B, C, k, Lo).transpose(0, 3, 2, 1)
+    return p.reshape(B, Lo, k * C)
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _pad_axis(x: jax.Array, n: int, axis: int) -> jax.Array:
+    pad = n - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def conv_synapse_delta(
+    pre_patches: jax.Array,
+    post_spikes: jax.Array,
+    pre_bits: jax.Array,
+    post_bits: jax.Array,
+    params: STDPParams,
+    *,
+    pairing: str = "nearest",
+    compensate: bool = True,
+    use_kernel: bool = True,
+    interpret: bool = True,
+    tile_m: int = 128,
+) -> jax.Array:
+    """Raw (K, C) conv-layer delta from im2col patches + bitplane registers.
+
+    ``pre_patches`` (M, K) / ``post_spikes`` (M, C) are the current-step
+    spikes and ``pre_bits`` (depth, M, K) / ``post_bits`` (depth, M, C)
+    the depth-major history registers gathered into the same patch layout
+    (k=0 row most recent); M flattens batch x output positions.  Callers
+    apply the eta / (B * P) normalisation, clip, and quantisation — the
+    delta is linear in its gate terms, so accumulation over rows commutes
+    with the kernel (the same contract as the dense ``synapse_delta``).
+    """
+    m, kk = pre_patches.shape
+    cc = post_spikes.shape[1]
+    depth = pre_bits.shape[0]
+    po2_ltp = params.a_plus * po2_weights(depth, params.tau_plus, compensate=compensate)
+    po2_ltd = params.a_minus * po2_weights(depth, params.tau_minus, compensate=compensate)
+    nearest = pairing == "nearest"
+    if not use_kernel:
+        return itp_stdp_conv_delta_ref(
+            pre_patches,
+            post_spikes,
+            pre_bits,
+            post_bits,
+            po2_ltp,
+            po2_ltd,
+            nearest=nearest,
+        )
+
+    tm = min(tile_m, _round_up(m, SUBLANE))
+    pm = _round_up(m, tm)
+    pk = _round_up(kk, LANE)
+    pc = _round_up(cc, LANE)
+    out = itp_stdp_conv_delta(
+        _pad_axis(_pad_axis(pre_patches, pm, 0), pk, 1),
+        _pad_axis(_pad_axis(post_spikes, pm, 0), pc, 1),
+        _pad_axis(_pad_axis(pre_bits, pm, 1), pk, 2),
+        _pad_axis(_pad_axis(post_bits, pm, 1), pc, 2),
+        po2_ltp,
+        po2_ltd,
+        nearest=nearest,
+        tile_m=tm,
+        interpret=interpret,
+    )
+    return out[:kk, :cc]

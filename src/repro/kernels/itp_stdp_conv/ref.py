@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the patch-level (im2col) ITP-STDP conv kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def itp_stdp_conv_delta_ref(
+    pre_patches: jax.Array,
+    post_spikes: jax.Array,
+    pre_bits: jax.Array,
+    post_bits: jax.Array,
+    po2_ltp: jax.Array,
+    po2_ltd: jax.Array,
+    *,
+    nearest: bool = True,
+) -> jax.Array:
+    """Reference semantics of the fused conv kernel, shapes as in kernel.py.
+
+    Args:
+      pre_patches: (M, K) im2col spike patches, M = batch x output positions.
+      post_spikes: (M, C) current-step output spikes.
+      pre_bits:    (depth, M, K) bitplane patches, k=0 row most recent.
+      post_bits:   (depth, M, C) output bitplanes.
+      po2_ltp:     (depth,) LTP read vector A+ * 2^(-k/tau').
+      po2_ltd:     (depth,) LTD read vector A- * 2^(-k/tau').
+      nearest:     nearest-neighbour (True) or all-to-all (False) pairing.
+
+    Returns the (K, C) weight delta summed over all M patch rows.  No
+    normalisation, clip, or quantisation — the caller owns those.
+    """
+    pre = pre_patches.astype(jnp.float32)
+    post = post_spikes.astype(jnp.float32)
+    pre_b = pre_bits.astype(jnp.float32)
+    post_b = post_bits.astype(jnp.float32)
+    if nearest:
+        # MSB mask (paper Fig. 11): keep only the most recent spike bit
+        pre_b = pre_b * (jnp.cumsum(pre_b, axis=0) == 1.0)
+        post_b = post_b * (jnp.cumsum(post_b, axis=0) == 1.0)
+
+    ltp_mag = jnp.einsum("d,dmk->mk", po2_ltp.astype(jnp.float32), pre_b)
+    ltd_mag = jnp.einsum("d,dmc->mc", po2_ltd.astype(jnp.float32), post_b)
+
+    # pair gate: potentiate where post fired alone, depress where pre fired
+    # alone — per (patch element, output channel) synapse, summed over rows
+    dw_ltp = jnp.einsum("mk,mc->kc", (1.0 - pre) * ltp_mag, post)
+    dw_ltd = jnp.einsum("mk,mc->kc", pre, (1.0 - post) * ltd_mag)
+    return dw_ltp - dw_ltd

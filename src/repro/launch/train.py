@@ -11,6 +11,11 @@ population of engine replicas trained on random rasters with the
 selectable weight-update backend (``--backend reference|fused|
 fused_interpret``), reporting synaptic-op throughput — the launcher path
 for exercising the fused Pallas datapath end-to-end.
+
+``--snn <net>`` switches to the paper's network workloads (2-layer SNN,
+6-layer DCSNN, 5-layer CSNN) on the same selectable backend: the conv
+nets drive the im2col-fused conv kernel, the fc layers the dense engine
+kernel — the launcher path for the whole-network fused datapath.
 """
 from __future__ import annotations
 
@@ -74,19 +79,81 @@ def run_engine_training(args) -> dict:
     return summary
 
 
+def run_snn_training(args) -> dict:
+    """One of the paper's SNNs on the selected weight-update backend.
+
+    Trains the chosen network on Bernoulli rasters for ``--steps``
+    simulation steps and reports wall-clock + synaptic-update throughput.
+    The conv nets (6layer-dcsnn, 5layer-csnn) exercise the im2col-fused
+    conv kernel (``repro.kernels.itp_stdp_conv``) end-to-end; returns the
+    summary dict (also printed) so tests can call this directly.
+    """
+    from repro.models import snn
+
+    cfg = snn.PAPER_NETWORKS[args.snn]("itp", backend=args.backend)
+    key = jax.random.PRNGKey(0)
+    state = snn.init_snn(key, cfg, args.batch)
+    n_in = 1
+    for d in cfg.input_shape:
+        n_in *= d
+    raster = jax.random.bernoulli(
+        jax.random.fold_in(key, 1), args.engine_rate,
+        (args.steps, args.batch, n_in))
+
+    t0 = time.time()
+    state, counts = jax.block_until_ready(
+        snn.run_snn(state, raster, cfg, train=True))
+    compile_s = time.time() - t0
+    t0 = time.time()
+    state, counts = jax.block_until_ready(
+        snn.run_snn(state, raster, cfg, train=True))
+    run_s = time.time() - t0
+
+    # synaptic updates per step: every learnable layer touches its full
+    # (fan_in × out) matrix per patch row
+    updates = 0
+    shapes = [tuple(cfg.input_shape)] + snn._layer_shapes(cfg)
+    for spec, in_shape, out_shape in zip(cfg.layers, shapes[:-1], shapes[1:]):
+        if spec.kind.startswith("pool"):
+            continue
+        rows = 1
+        for d in out_shape[:-1] or (1,):
+            rows *= d
+        updates += args.batch * rows * snn._fan_in(spec, in_shape) \
+            * spec.out_features
+    summary = {
+        "net": cfg.name, "backend": args.backend, "batch": args.batch,
+        "steps": args.steps,
+        "compile_seconds": round(compile_s, 3),
+        "run_seconds": round(run_s, 4),
+        "sops_per_s": args.steps * updates / max(run_s, 1e-9),
+        "mean_rate": float(counts.mean()) / args.steps,
+    }
+    print(f"snn training [{cfg.name} / {args.backend}]: batch {args.batch} × "
+          f"{args.steps} steps — {summary['sops_per_s']:.3e} SOP/s "
+          f"(compile {compile_s:.2f}s, run {run_s:.3f}s, "
+          f"mean rate {summary['mean_rate']:.3f})", flush=True)
+    return summary
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen3-0.6b")
     ap.add_argument("--engine", action="store_true",
                     help="train the ITP-STDP learning engine instead of the "
                          "LM stack")
+    ap.add_argument("--snn", default=None,
+                    choices=("2layer-snn", "6layer-dcsnn", "5layer-csnn"),
+                    help="train one of the paper's SNNs instead of the LM "
+                         "stack (conv nets exercise the fused conv kernel)")
     ap.add_argument("--backend", default="reference", choices=BACKENDS,
-                    help="engine weight-update datapath (--engine mode)")
+                    help="weight-update datapath (--engine and --snn modes)")
     ap.add_argument("--engine-pre", type=int, default=256)
     ap.add_argument("--engine-post", type=int, default=256)
     ap.add_argument("--replicas", type=int, default=8)
     ap.add_argument("--engine-rate", type=float, default=0.3,
-                    help="Bernoulli input spike rate (--engine mode)")
+                    help="Bernoulli input spike rate (--engine and --snn "
+                         "modes)")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-runnable)")
     ap.add_argument("--steps", type=int, default=100)
@@ -106,6 +173,9 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
+    if args.snn:
+        run_snn_training(args)
+        return
     if args.engine:
         run_engine_training(args)
         return

@@ -8,10 +8,13 @@ All layers learn with the selectable STDP rule family ('exact' /
 'itp' (compensated) / 'itp_nocomp'), sharing one protocol so the Table II
 *parity* comparison is apples-to-apples.  Convolutional STDP applies the
 pair-based rule per (patch-pixel → output-neuron) synapse, accumulated over
-spatial positions via patch einsums (the dense layer is the 1×1 special
-case).  Readout is a deterministic ridge regression on time-averaged spike
-counts — identical across rules, so accuracy differences isolate the
-learning rule.
+spatial positions at the patch level (the dense layer is the 1×1 special
+case): conv layers route every backend through the im2col-fused kernel
+package (``repro.kernels.itp_stdp_conv``) — pure-jnp reference, compiled
+Pallas kernel, or the interpreted kernel — and fc layers through the dense
+engine kernel.  Readout is a deterministic ridge regression on
+time-averaged spike counts — identical across rules, so accuracy
+differences isolate the learning rule.
 
 Weight-update magnitudes come from the same bitplane histories as the
 learning engine: ``exact``/``itp`` read the history against e^(-k/τ) ≡
@@ -21,7 +24,6 @@ learning engine: ``exact``/``itp`` read the history against e^(-k/τ) ≡
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import partial
 from typing import Any, NamedTuple
 
@@ -34,6 +36,8 @@ from repro.core.lif import (IzhikevichParams, LIFParams, izhikevich_init,
                             izhikevich_step, lif_init, lif_step)
 from repro.core.stdp import STDPParams, po2_weights
 from repro.kernels.itp_stdp.ops import resolve_backend, synapse_delta
+from repro.kernels.itp_stdp_conv.ops import (conv_synapse_delta, im2col_1d,
+                                             im2col_2d)
 
 
 # ---------------------------------------------------------------------------
@@ -72,12 +76,6 @@ class SNNConfig:
 
     def __post_init__(self):
         resolve_backend(self.backend)   # validates against BACKENDS
-        if self.backend != "reference" and any(
-                s.kind.startswith("conv") for s in self.layers):
-            warnings.warn(
-                f"backend={self.backend!r}: conv layers have no fused "
-                "datapath yet and fall back to the reference update; only "
-                "fc layers run the Pallas kernel", stacklevel=2)
 
     @property
     def compensate(self) -> bool:
@@ -287,30 +285,42 @@ def _fused_fc_delta(cfg: SNNConfig, st: "LayerState", s_in: jax.Array,
     return jax.vmap(one)(pre, post, pre_bits, post_bits).sum(axis=0)
 
 
+def _conv_delta(cfg: SNNConfig, spec: SNNLayerSpec, st: "LayerState",
+                patches: jax.Array, s_out: jax.Array,
+                in_shape: tuple) -> jax.Array:
+    """Batch+position-summed Δw for a conv layer via the patch-level kernel.
+
+    The conv STDP update is the dense pair rule per (patch element → output
+    channel) synapse accumulated over batch and spatial positions; after
+    im2col it is two matmuls contracting the patch-row axis, which the
+    ``itp_stdp_conv`` kernel fuses with the po2 history read.  All three
+    backends route here: ``reference`` takes the pure-jnp oracle,
+    ``fused``/``fused_interpret`` the Pallas kernel (compiled /
+    interpreted).  The bitplane registers are gathered into the same im2col
+    layout as the spikes, so each patch element carries the full depth
+    history of its source pixel.
+    """
+    use_kernel, interpret = resolve_backend(cfg.backend)
+    B = s_out.shape[0]
+    im2col = im2col_2d if spec.kind == "conv2d" else im2col_1d
+    pre_bits = registers_depth_major(st.pre_hist).astype(jnp.float32)
+    pre_bits = pre_bits.reshape((cfg.depth, B) + tuple(in_shape))
+    pre_bits = jax.vmap(
+        lambda p: im2col(p, spec.kernel, spec.stride))(pre_bits)
+    pre_bits = pre_bits.reshape(cfg.depth, -1, pre_bits.shape[-1])
+    post_bits = registers_depth_major(st.post_hist).astype(jnp.float32)
+    post_bits = post_bits.reshape(cfg.depth, -1, s_out.shape[-1])
+    return conv_synapse_delta(
+        patches.reshape(-1, patches.shape[-1]),      # (M, K)
+        s_out.reshape(-1, s_out.shape[-1]),          # (M, C)
+        pre_bits, post_bits, cfg.stdp, pairing=cfg.pairing,
+        compensate=cfg.compensate, use_kernel=use_kernel,
+        interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # Layer steps
 # ---------------------------------------------------------------------------
-
-def _patches2d(x: jax.Array, k: int, stride: int) -> jax.Array:
-    """(B,H,W,C) → (B,Ho,Wo,k·k·C) im2col patches."""
-    B, H, W, C = x.shape
-    p = jax.lax.conv_general_dilated_patches(
-        x.transpose(0, 3, 1, 2), (k, k), (stride, stride), "VALID")
-    # p: (B, C*k*k, Ho, Wo) with feature order (C, kh, kw)
-    Ho, Wo = p.shape[2], p.shape[3]
-    p = p.reshape(B, C, k * k, Ho, Wo).transpose(0, 3, 4, 2, 1)
-    return p.reshape(B, Ho, Wo, k * k * C)
-
-
-def _patches1d(x: jax.Array, k: int, stride: int) -> jax.Array:
-    """(B,L,C) → (B,Lo,k·C)."""
-    B, L, C = x.shape
-    p = jax.lax.conv_general_dilated_patches(
-        x.transpose(0, 2, 1)[..., None], (k, 1), (stride, 1), "VALID")
-    Lo = p.shape[2]
-    p = p.reshape(B, C, k, Lo).transpose(0, 3, 2, 1)
-    return p.reshape(B, Lo, k * C)
-
 
 def _learnable_step(spec: SNNLayerSpec, cfg: SNNConfig, w: jax.Array,
                     st: LayerState, spikes_in: jax.Array,
@@ -326,11 +336,11 @@ def _learnable_step(spec: SNNLayerSpec, cfg: SNNConfig, w: jax.Array,
     if spec.kind == "fc":
         patches = s_in.reshape(B, 1, -1)                   # (B, P=1, fan_in)
     elif spec.kind == "conv2d":
-        p = _patches2d(s_in, spec.kernel, spec.stride)     # (B,Ho,Wo,K)
+        p = im2col_2d(s_in, spec.kernel, spec.stride)      # (B,Ho,Wo,K)
         patches = p.reshape(B, -1, p.shape[-1])
         out_hw = p.shape[1:3]
     else:                                                   # conv1d
-        p = _patches1d(s_in, spec.kernel, spec.stride)
+        p = im2col_1d(s_in, spec.kernel, spec.stride)
         patches = p.reshape(B, -1, p.shape[-1])
         out_l = p.shape[1]
     # activity-normalised accumulation: scale by the *population mean*
@@ -366,7 +376,14 @@ def _learnable_step(spec: SNNLayerSpec, cfg: SNNConfig, w: jax.Array,
     s_out = spikes_out.astype(jnp.float32)
 
     # --- ITP-STDP update --------------------------------------------------
-    if train and cfg.backend != "reference" and spec.kind == "fc":
+    if train and spec.kind != "fc":
+        # conv layers: patch-level im2col-fused kernel package, all three
+        # backends (reference oracle / compiled Pallas / interpreted)
+        dw = _conv_delta(cfg, spec, st, patches, s_out, spikes_in.shape[1:])
+        denom = float(B * patches.shape[1])
+        w = jnp.clip(w + cfg.eta * dw / denom, 0.0, 1.0)
+        w = _quantise(w, cfg)
+    elif train and cfg.backend != "reference":
         # fused engine datapath: per-sample Δw from the Pallas kernel,
         # batch-accumulated, then the same clip + quantise as the reference
         dw = _fused_fc_delta(cfg, st, s_in, s_out)
@@ -378,17 +395,8 @@ def _learnable_step(spec: SNNLayerSpec, cfg: SNNConfig, w: jax.Array,
                               cfg.stdp.tau_plus, cfg)      # (B,*in)
         ltd = _hist_magnitude(st.post_hist, out_shape, cfg.stdp.a_minus,
                               cfg.stdp.tau_minus, cfg)     # (B,*out)
-        if spec.kind == "fc":
-            ltp_p = ltp.reshape(B, 1, -1)
-            pre_p = patches
-        elif spec.kind == "conv2d":
-            ltp_p = _patches2d(ltp, spec.kernel, spec.stride).reshape(
-                B, -1, patches.shape[-1])
-            pre_p = patches
-        else:
-            ltp_p = _patches1d(ltp, spec.kernel, spec.stride).reshape(
-                B, -1, patches.shape[-1])
-            pre_p = patches
+        ltp_p = ltp.reshape(B, 1, -1)                      # (B, P=1, fan_in)
+        pre_p = patches
         post_s = s_out.reshape(B, -1, w.shape[1])          # (B,P,out)
         ltd_m = ltd.reshape(B, -1, w.shape[1])
         # pair gate (§V-A): potentiate where post fired alone, depress where
