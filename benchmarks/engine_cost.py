@@ -24,8 +24,6 @@ import time
 import jax
 
 from benchmarks.bench_io import update_bench_json
-from repro.core.baseline import (CounterEngineConfig, init_counter_engine,
-                                 run_counter_engine)
 from repro.core.engine import (EngineConfig, init_engine,
                                init_engine_population, run_engine,
                                run_engine_population)
@@ -90,6 +88,12 @@ def _time_fn(fn, *args, reps: int = 3) -> float:
 
 
 def measure_throughput(n: int, t_steps: int = 100, seed: int = 0) -> dict:
+    """ITP engine vs the counter-based exact-STDP rule, unified engine API.
+
+    ``rule="exact"`` is the old standalone CounterEngine folded into the
+    learning-rule registry (per-pair Δt + base-e exponential); identical
+    LIF dynamics and scan loop, so the ratio isolates the update datapath.
+    """
     key = jax.random.PRNGKey(seed)
     train = jax.random.bernoulli(key, 0.3, (t_steps, n))
 
@@ -98,9 +102,9 @@ def measure_throughput(n: int, t_steps: int = 100, seed: int = 0) -> dict:
     itp = jax.jit(lambda s, x: run_engine(s, x, itp_cfg))
     t_itp = _time_fn(itp, itp_state, train)
 
-    cnt_cfg = CounterEngineConfig(n_pre=n, n_post=n)
-    cnt_state = init_counter_engine(key, cnt_cfg)
-    cnt = jax.jit(lambda s, x: run_counter_engine(s, x, cnt_cfg))
+    cnt_cfg = EngineConfig(n_pre=n, n_post=n, rule="exact")
+    cnt_state = init_engine(key, cnt_cfg)
+    cnt = jax.jit(lambda s, x: run_engine(s, x, cnt_cfg))
     t_cnt = _time_fn(cnt, cnt_state, train)
 
     sops = n * n * t_steps

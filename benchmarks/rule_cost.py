@@ -1,0 +1,117 @@
+"""Benchmark: learning-rule cost — engine-step throughput per rule.
+
+The repo-side analogue of the paper's speedup tables on the *rule* axis:
+every rule in the ``repro.plasticity`` registry drives the same engine
+(identical LIF dynamics, scan loop, and jit) over a small size grid, so
+the throughput ratio isolates the weight-update datapath — the
+intrinsic-timing register read (``itp``) against the conventional
+per-pair Δt datapaths (``exact``/``linear``/``imstdp``).  CPU wall-time
+stands in for the hardware's cycle count; the *ratio* is the algorithmic
+claim.
+
+Headline cell: ``itp`` vs ``exact`` — the ITP-STDP engine against the
+counter-based exact-STDP baseline it replaces (identical trajectories
+under nearest-neighbour pairing, eq. 18).
+
+Merges a ``rules`` section into the tracked repo-root BENCH_engine.json
+(``benchmarks/bench_io.py`` read-modify-write, never clobbering the
+engine/conv sections); ``--quick`` runs use the smaller, incomparable
+grid and land in the gitignored ``.quick`` twin.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from benchmarks.bench_io import update_bench_json
+from repro.core.engine import EngineConfig, init_engine, run_engine
+from repro.plasticity import rule_names
+
+HEADLINE = ("itp", "exact")
+
+
+def _time_fn(fn, *args, reps: int = 3) -> float:
+    fn(*args)  # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_rule_throughput(rule: str, n: int, t_steps: int, seed: int = 0) -> float:
+    """SOP/s of a jitted engine scan under ``rule`` (reference backend)."""
+    key = jax.random.PRNGKey(seed)
+    cfg = EngineConfig(n_pre=n, n_post=n, rule=rule)
+    state = init_engine(key, cfg)
+    train = jax.random.bernoulli(key, 0.3, (t_steps, n))
+    fn = jax.jit(lambda s, x: run_engine(s, x, cfg))
+    return n * n * t_steps / _time_fn(fn, state, train)
+
+
+def measure_rule_grid(sizes=(128, 256, 512), t_steps: int = 50, rules=None) -> list[dict]:
+    """Per-rule engine throughput over a size grid (reference backend)."""
+    rules = tuple(rules) if rules is not None else rule_names()
+    rows = []
+    for n in sizes:
+        cell = {"n": n, "t_steps": t_steps, "sops_per_s": {}}
+        for rule in rules:
+            cell["sops_per_s"][rule] = measure_rule_throughput(rule, n, t_steps)
+        itp, exact = (cell["sops_per_s"].get(r) for r in HEADLINE)
+        if itp and exact:
+            cell["itp_vs_exact_speedup"] = itp / exact
+        rows.append(cell)
+    return rows
+
+
+def run(
+    out_dir: str = "experiments/bench",
+    verbose: bool = True,
+    sizes=(128, 256, 512),
+    t_steps: int = 50,
+    quick: bool = False,
+) -> dict:
+    grid = measure_rule_grid(sizes, t_steps)
+    out = {
+        "grid": grid,
+        "rules": list(rule_names()),
+        "quick": quick,
+        "note": "reference backend; ratio isolates the update datapath",
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "rule_cost.json"), "w") as f:
+        json.dump(out, f)
+    bench_name = "BENCH_engine.quick.json" if quick else "BENCH_engine.json"
+    update_bench_json(
+        bench_name,
+        {
+            "rules": {
+                "benchmark": "rule_throughput",
+                "unit": "SOP/s",
+                "quick": quick,
+                "grid": grid,
+            }
+        },
+    )
+    if verbose:
+        print("— learning-rule cost (engine-step throughput per rule) —")
+        names = list(rule_names())
+        hdr = "  " + f"{'n':>6s} " + " ".join(f"{r:>12s}" for r in names)
+        hdr += f" {'itp/exact':>10s}"
+        print(hdr)
+        for cell in grid:
+            vals = " ".join(f"{cell['sops_per_s'][r]:12.3e}" for r in names)
+            spd = cell.get("itp_vs_exact_speedup", float("nan"))
+            print(f"  {cell['n']:6d} {vals} {spd:10.2f}")
+        print(f"  → {bench_name} (rules section, {len(grid)} grid cells)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

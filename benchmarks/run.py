@@ -5,6 +5,7 @@ One module per paper table/figure (DESIGN.md §7):
     isi               — Fig. 6 ISI histogram + depth-7 coverage
     network_accuracy  — Table II accuracy parity (3 nets × 3 rules)
     engine_cost       — Tables III-V op/bit model + measured SOP/s
+    rule_cost         — per-rule engine throughput (ITP vs exact & co.)
     conv_cost         — im2col-fused conv update: reference vs Pallas grid
     roofline          — §Roofline terms from the dry-run artifacts
 
@@ -22,8 +23,8 @@ import time
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=("drift", "isi", "network_accuracy",
-                                       "engine_cost", "conv_cost",
-                                       "roofline"))
+                                       "engine_cost", "rule_cost",
+                                       "conv_cost", "roofline"))
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args()
@@ -69,6 +70,19 @@ def main():
             "seconds": round(time.time() - t0, 1),
             "speedups": [t["speedup"] for t in r["throughput"]],
             "fused_speedups": [c["fused_speedup"] for c in r["backend_grid"]]}
+        print()
+    if want("rule_cost"):
+        from benchmarks import rule_cost
+        t0 = time.time()
+        if args.quick:
+            r = rule_cost.run(args.out, sizes=(64, 128), t_steps=25,
+                              quick=True)
+        else:
+            r = rule_cost.run(args.out)
+        summary["rule_cost"] = {
+            "seconds": round(time.time() - t0, 1),
+            "itp_vs_exact": [c.get("itp_vs_exact_speedup")
+                             for c in r["grid"]]}
         print()
     if want("conv_cost"):
         from benchmarks import conv_cost

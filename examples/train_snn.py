@@ -10,9 +10,14 @@ conv kernel, the fc layers the dense engine kernel).
 
 Run:  PYTHONPATH=src python examples/train_snn.py \
           [--net 2layer-snn|6layer-dcsnn|5layer-csnn] \
-          [--rule itp|exact|itp_nocomp] \
+          [--rule itp|itp_nocomp|exact|linear|imstdp] \
           [--backend reference|fused|fused_interpret]
       (--steps 300 ≈ 300 simulation steps = 10 batches × 30-step rasters)
+
+``--rule`` selects the learning rule from the ``repro.plasticity``
+registry — the paper's Table II comparison axis.  The counter rules
+(exact/linear/imstdp) are reference-backend only; combining one with a
+fused* backend fails up front with the valid combinations.
 """
 import argparse
 import time
@@ -20,9 +25,10 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import plasticity
 from repro.data import (Prefetcher, encode_batch, spike_stream,
                         synthetic_digits, synthetic_fashion, synthetic_fault)
-from repro.kernels.itp_stdp.ops import BACKENDS
+from repro.kernels.dispatch import BACKENDS
 from repro.models import snn
 
 SAMPLERS = {
@@ -39,7 +45,10 @@ def main():
     ap.add_argument("--net", default="2layer-snn", choices=tuple(SAMPLERS),
                     help="which of the paper's three networks to train")
     ap.add_argument("--rule", default="itp",
-                    choices=("exact", "itp", "itp_nocomp"))
+                    choices=plasticity.rule_names(),
+                    help="learning rule (paper Table II axis); the counter "
+                         "rules exact/linear/imstdp need "
+                         "--backend reference")
     ap.add_argument("--backend", default="reference", choices=BACKENDS,
                     help="weight-update datapath: pure-jnp reference or the "
                          "fused Pallas kernels (interpret mode runs them on "

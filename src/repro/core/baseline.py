@@ -1,99 +1,64 @@
-"""Counter-based exact-STDP baseline engine (what the paper optimises away).
+"""Deprecated shim: the counter-based exact-STDP baseline engine.
 
-Conventional digital STDP (§I, [21]/[28]-style): every neuron carries a
-*last-spike-time counter*; on a spike event the timing difference
-Δt = t_post − t_pre is computed per synapse pair and the base-e exponential
-is evaluated per pair.  Per step this costs O(n_pre · n_post) exponential
-evaluations + subtractions, versus ITP-STDP's O(n_pre + n_post) register
-reads and one rank-1 outer product — the asymmetry Tables III-V monetise
-in LUTs/area/energy, reproduced here as the measured-throughput baseline
-in ``benchmarks/engine_cost.py``.
+The CounterEngine (conventional digital STDP, §I: per-neuron last-spike
+counters, per-pair Δt + base-e exponential) is now a first-class learning
+rule — ``EngineConfig(rule="exact")`` via ``repro.plasticity`` — so the
+baseline shares the engine's LIF dynamics, scan loop, backends and
+benchmarks instead of maintaining a parallel one-off API.  A counter
+``window`` of W maps to a rule ``depth`` of W+1 (valid delays t ∈ [0, W],
+saturation at W+1 — identical semantics to the old standalone engine).
 
-Semantics: nearest-neighbour pairing over a finite window (the counter
-saturates at ``window``), matching the learning engine's configuration.
+These aliases keep old call sites green (pinned by
+tests/test_plasticity.py); new code should use ``repro.core.engine`` with
+``rule="exact"`` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple
+from repro.core.engine import (EngineConfig, EngineState, engine_step,
+                               init_engine, run_engine)
+from repro.core.lif import LIFParams
+from repro.core.stdp import STDPParams
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.lif import LIFParams, LIFState, lif_init, lif_step
-from repro.core.stdp import STDPParams, pair_gate
+CounterEngineState = EngineState
 
 
-@dataclasses.dataclass(frozen=True)
-class CounterEngineConfig:
-    n_pre: int = 4
-    n_post: int = 4
-    window: int = 7                     # counter saturation (≙ history depth)
-    eta: float = 1.0 / 16.0
-    w_min: float = 0.0
-    w_max: float = 1.0
-    stdp: STDPParams = dataclasses.field(default_factory=STDPParams)
-    lif: LIFParams = dataclasses.field(default_factory=LIFParams)
+def CounterEngineConfig(n_pre: int = 4, n_post: int = 4, window: int = 7,
+                        eta: float = 1.0 / 16.0, w_min: float = 0.0,
+                        w_max: float = 1.0,
+                        stdp: STDPParams | None = None,
+                        lif: LIFParams | None = None) -> EngineConfig:
+    """Deprecated: build the equivalent ``EngineConfig(rule="exact")``."""
+    return EngineConfig(
+        n_pre=n_pre, n_post=n_post, depth=window + 1, rule="exact",
+        eta=eta, w_min=w_min, w_max=w_max,
+        stdp=stdp if stdp is not None else STDPParams(),
+        lif=lif if lif is not None else LIFParams())
 
 
-class CounterEngineState(NamedTuple):
-    w: jax.Array              # (n_pre, n_post)
-    t_pre: jax.Array          # int32 (n_pre,) steps since last pre spike
-    t_post: jax.Array         # int32 (n_post,)
-    neurons: LIFState
+def init_counter_engine(key, cfg, w_init=None):
+    """Deprecated alias for :func:`repro.core.engine.init_engine`."""
+    _check_exact(cfg)
+    return init_engine(key, cfg, w_init)
 
 
-def init_counter_engine(key: jax.Array, cfg: CounterEngineConfig,
-                        w_init: jax.Array | None = None) -> CounterEngineState:
-    if w_init is None:
-        w_init = jax.random.uniform(key, (cfg.n_pre, cfg.n_post),
-                                    minval=0.2, maxval=0.8)
-    big = jnp.int32(cfg.window + 1)
-    return CounterEngineState(
-        w=jnp.asarray(w_init, jnp.float32),
-        t_pre=jnp.full((cfg.n_pre,), big),
-        t_post=jnp.full((cfg.n_post,), big),
-        neurons=lif_init((cfg.n_post,), cfg.lif),
-    )
+def counter_engine_step(state, pre_spikes, cfg):
+    """Deprecated alias for :func:`repro.core.engine.engine_step`."""
+    _check_exact(cfg)
+    return engine_step(state, pre_spikes, cfg)
 
 
-def counter_engine_step(state: CounterEngineState, pre_spikes: jax.Array,
-                        cfg: CounterEngineConfig
-                        ) -> tuple[CounterEngineState, jax.Array]:
-    """One step of the conventional counter-based STDP engine.
-
-    The Δw computation is deliberately per-pair: Δt is formed for every
-    (pre, post) synapse and exp() evaluated per synapse — the datapath the
-    paper's intrinsic-timing representation collapses to a register read.
-    """
-    pre = jnp.asarray(pre_spikes)
-    i_in = pre.astype(jnp.float32) @ state.w
-    neurons, post = lif_step(state.neurons, i_in, cfg.lif)
-
-    p = cfg.stdp
-    # per-pair timing difference from the counters (O(N²) work)
-    dt_ltp = state.t_pre[:, None].astype(jnp.float32)    # pre fired dt ago
-    dt_ltd = state.t_post[None, :].astype(jnp.float32)
-    ltp_valid = state.t_pre[:, None] <= cfg.window
-    ltd_valid = state.t_post[None, :] <= cfg.window
-    ltp_mag = p.a_plus * jnp.exp(-dt_ltp / p.tau_plus) * ltp_valid
-    ltd_mag = p.a_minus * jnp.exp(-dt_ltd / p.tau_minus) * ltd_valid
-
-    ltp_en, ltd_en = pair_gate(pre[:, None], post[None, :])
-    dw = ltp_en * ltp_mag - ltd_en * ltd_mag
-    w = jnp.clip(state.w + cfg.eta * dw, cfg.w_min, cfg.w_max)
-
-    big = cfg.window + 1
-    t_pre = jnp.where(pre.astype(bool), 0,
-                      jnp.minimum(state.t_pre + 1, big)).astype(jnp.int32)
-    t_post = jnp.where(post, 0,
-                       jnp.minimum(state.t_post + 1, big)).astype(jnp.int32)
-    return CounterEngineState(w, t_pre, t_post, neurons), post
+def run_counter_engine(state, spike_train, cfg):
+    """Deprecated alias for :func:`repro.core.engine.run_engine`."""
+    _check_exact(cfg)
+    return run_engine(state, spike_train, cfg)
 
 
-def run_counter_engine(state: CounterEngineState, spike_train: jax.Array,
-                       cfg: CounterEngineConfig
-                       ) -> tuple[CounterEngineState, jax.Array]:
-    def step(s, x):
-        return counter_engine_step(s, x, cfg)
-    return jax.lax.scan(step, state, spike_train)
+def _check_exact(cfg: EngineConfig) -> None:
+    if not isinstance(cfg, EngineConfig):
+        raise TypeError(
+            "CounterEngineConfig now *returns* an EngineConfig(rule='exact') "
+            f"— call it rather than passing {type(cfg).__name__}")
+    if cfg.rule != "exact":
+        raise ValueError(
+            f"counter-engine aliases expect rule='exact', got {cfg.rule!r}; "
+            "use repro.core.engine directly for other rules")

@@ -1,34 +1,37 @@
 """ITP-STDP learning engine (paper §III-B, §V, Figs. 4 & 9).
 
-Couples LIF neurons, bitplane spike histories, a crossbar connectivity
-table and a register weight array into a single scan-able step — the JAX
-equivalent of the prototype engine (4 presynaptic × 4 postsynaptic, fully
-connected) and its scaled-up versions.
+Couples LIF neurons, per-rule timing state (bitplane spike histories for
+the intrinsic-timing rules, last-spike counters for the conventional Δt
+baselines), a crossbar connectivity table and a register weight array into
+a single scan-able step — the JAX equivalent of the prototype engine
+(4 presynaptic × 4 postsynaptic, fully connected) and its scaled-up
+versions.
 
 Dataflow per step (matches Fig. 9 left-to-right):
   1. presyn spikes (external input or previous layer) gate the weight rows;
      each postsynaptic neuron accumulates  I_j = Σ_i s_i · w_ij   (§V-B)
   2. LIF neurons integrate I and fire
-  3. pre/post histories are read → Δw per ITP-STDP, weights updated in place
-  4. new spikes are pushed into the histories (the 'shift-in')
+  3. the timing state is read → Δw per the selected ``LearningRule``
+     (``EngineConfig.rule``), weights updated in place
+  4. new spikes are recorded into the state (the 'shift-in')
 
 The engine is pure function + NamedTuple state, so it jits, vmaps over
 batch, and shards over (pre, post) tiles with pjit.  The Pallas kernel in
-``repro.kernels.itp_stdp`` implements step 3's fused datapath.
+``repro.kernels.itp_stdp`` implements step 3's fused datapath for the
+kernel-backed (history) rules; see ``repro.plasticity`` for the registry
+and the rule × backend matrix in ROADMAP.md.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import history as H
+from repro import plasticity
 from repro.core.lif import LIFParams, LIFState, lif_init, lif_step
-from repro.core.stdp import STDPParams, magnitudes_depth_major, pair_gate
-from repro.kernels.itp_stdp.ops import (resolve_backend,
-                                        weight_update_depth_major)
+from repro.core.stdp import STDPParams
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,18 +46,32 @@ class EngineConfig:
     w_max: float = 1.0
     w_bits: int = 8                      # weight word width incl. sign
     quantise: bool = False               # round weights to the 8-bit grid
+    rule: str = "itp"                    # plasticity.rule_names()
     backend: str = "reference"           # reference | fused | fused_interpret
     stdp: STDPParams = dataclasses.field(default_factory=STDPParams)
     lif: LIFParams = dataclasses.field(default_factory=LIFParams)
 
     def __post_init__(self):
-        resolve_backend(self.backend)   # validates against BACKENDS
+        # config-construction-time validation of the rule × backend cell:
+        # unknown names list the valid options; kernel-less rules reject
+        # the fused* backends with the actionable alternatives
+        rule = plasticity.get_rule(self.rule)
+        plasticity.resolve_rule_backend(rule, self.backend)
+        rule.check_pairing(self.pairing)
+
+    def learning_rule(self) -> plasticity.LearningRule:
+        return plasticity.get_rule(self.rule)
+
+    def effective_compensate(self) -> bool:
+        """The rule's compensation override, or this config's flag."""
+        rc = self.learning_rule().compensate
+        return self.compensate if rc is None else rc
 
 
 class EngineState(NamedTuple):
     w: jax.Array                 # float32[n_pre, n_post]
-    pre_hist: H.SpikeHistory     # depth × n_pre
-    post_hist: H.SpikeHistory    # depth × n_post
+    pre_hist: Any                # rule timing state (histories / counters)
+    post_hist: Any
     neurons: LIFState            # n_post membrane
 
 
@@ -63,10 +80,11 @@ def init_engine(key: jax.Array, cfg: EngineConfig,
     if w_init is None:
         w_init = jax.random.uniform(key, (cfg.n_pre, cfg.n_post),
                                     minval=0.2, maxval=0.8)
+    rule = cfg.learning_rule()
     return EngineState(
         w=jnp.asarray(w_init, jnp.float32),
-        pre_hist=H.init_history(cfg.n_pre, cfg.depth),
-        post_hist=H.init_history(cfg.n_post, cfg.depth),
+        pre_hist=rule.init_state(cfg.n_pre, cfg.depth),
+        post_hist=rule.init_state(cfg.n_post, cfg.depth),
         neurons=lif_init((cfg.n_post,), cfg.lif),
     )
 
@@ -89,40 +107,41 @@ def engine_step(state: EngineState, pre_spikes: jax.Array,
     # 2. LIF integrate-and-fire
     neurons, post_spikes = lif_step(state.neurons, i_in, cfg.lif)
 
-    # 3. ITP-STDP weight update from the *stored* histories (past spikes).
-    #    Depth-major fast path: per-neuron magnitudes are a (depth,)·
-    #    (depth, N) read with no relayout; the synapse matrix sees only a
+    # 3. Weight update read from the *stored* timing state (past spikes),
+    #    dispatched through the selected LearningRule.  For the intrinsic-
+    #    timing rules the per-neuron magnitudes are a (depth,)·(depth, N)
+    #    register read with no relayout and the synapse matrix sees only a
     #    rank-1 gated outer product — O(N) readout + O(N²) add/mul, no
-    #    per-pair transcendental (the intrinsic-timing claim, §III).
-    #    Backend-selectable: "reference" keeps the pure-jnp path; "fused"
-    #    routes through the Pallas kernel (one VMEM-resident RMW per tile),
-    #    "fused_interpret" the same kernel in interpret mode (CPU checks).
-    use_kernel, interpret = resolve_backend(cfg.backend)
+    #    per-pair transcendental (the paper's claim, §III); the counter
+    #    rules keep their deliberately per-pair Δt datapath.  Backend-
+    #    selectable for kernel-backed rules: "reference" keeps the pure-jnp
+    #    path; "fused" routes through the Pallas kernel (one VMEM-resident
+    #    RMW per tile), "fused_interpret" the same kernel via the
+    #    interpreter (CPU checks).
+    rule = cfg.learning_rule()
+    use_kernel, interpret = plasticity.resolve_rule_backend(rule, cfg.backend)
+    compensate = cfg.effective_compensate()
     if use_kernel:
+        # deferred import: repro.core must stay importable from the kernel
+        # packages' own modules (ops.py imports repro.core.history)
+        from repro.kernels.itp_stdp.ops import weight_update_depth_major
         w = weight_update_depth_major(
             state.w, pre_spikes, post_spikes,
-            H.registers_depth_major(state.pre_hist),
-            H.registers_depth_major(state.post_hist),
-            cfg.stdp, pairing=cfg.pairing, compensate=cfg.compensate,
+            rule.readout(state.pre_hist), rule.readout(state.post_hist),
+            cfg.stdp, pairing=cfg.pairing, compensate=compensate,
             eta=cfg.eta, w_min=cfg.w_min, w_max=cfg.w_max,
             interpret=interpret)
     else:
-        ltp_mag = magnitudes_depth_major(
-            H.registers_depth_major(state.pre_hist), cfg.stdp.a_plus,
-            cfg.stdp.tau_plus, pairing=cfg.pairing, compensate=cfg.compensate)
-        ltd_mag = magnitudes_depth_major(
-            H.registers_depth_major(state.post_hist), cfg.stdp.a_minus,
-            cfg.stdp.tau_minus, pairing=cfg.pairing,
-            compensate=cfg.compensate)
-        ltp_en, ltd_en = pair_gate(pre_spikes[:, None], post_spikes[None, :])
-        dw = ltp_en * ltp_mag[:, None] - ltd_en * ltd_mag[None, :]
+        dw = rule.delta(state.pre_hist, state.post_hist,
+                        pre_spikes, post_spikes, cfg.stdp, depth=cfg.depth,
+                        pairing=cfg.pairing, compensate=compensate)
         w = jnp.clip(state.w + cfg.eta * dw, cfg.w_min, cfg.w_max)
     if cfg.quantise:
         w = _quantise(w, cfg)
 
-    # 4. shift-in the new spikes
-    pre_hist = H.push(state.pre_hist, pre_spikes)
-    post_hist = H.push(state.post_hist, post_spikes)
+    # 4. record the new spikes (history shift-in / counter reset)
+    pre_hist = rule.step(state.pre_hist, pre_spikes, depth=cfg.depth)
+    post_hist = rule.step(state.post_hist, post_spikes, depth=cfg.depth)
     return EngineState(w, pre_hist, post_hist, neurons), post_spikes
 
 

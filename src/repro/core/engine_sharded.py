@@ -23,12 +23,22 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import history as H
+from repro import plasticity
 from repro.core.engine import EngineConfig, EngineState, _quantise
 from repro.core.lif import LIFState, lif_step
-from repro.core.stdp import magnitudes_depth_major, pair_gate
-from repro.kernels.itp_stdp.ops import (resolve_backend,
-                                        weight_update_depth_major)
+from repro.core.stdp import pair_gate
+from repro.kernels.itp_stdp.ops import weight_update_depth_major
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-compat shard_map: new ``jax.shard_map`` (check_vma) or the
+    ``jax.experimental.shard_map`` API (check_rep) on older releases."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 def shard_engine_state(state: EngineState, mesh: Mesh,
@@ -56,11 +66,16 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
     histories and neuron state replicate, ``state.w`` shards (pre, post).
     """
     pre_ax, post_ax = axes
-    use_kernel, interpret = resolve_backend(cfg.backend)
+    rule = cfg.learning_rule()
+    use_kernel, interpret = plasticity.resolve_rule_backend(rule, cfg.backend)
+    compensate = cfg.effective_compensate()
 
-    def local_step(w, pre_spikes, pre_reg, post_reg, v):
-        # w: local (pre_tile, post_tile); spikes/histories: global shards
-        # along their own axes (pre over pre_ax, post over post_ax)
+    def local_step(w, pre_spikes, pre_read, post_read, v):
+        # w: local (pre_tile, post_tile); spikes and per-neuron readout
+        # views shard along their own axes (pre over pre_ax, post over
+        # post_ax).  The readout rows are rule-specific — depth bitplane
+        # rows for the history rules, one counter row for the Δt rules —
+        # but always per-neuron, so the tile update stays local.
         i_local = pre_spikes.astype(jnp.float32) @ w       # (post_tile,)
         i_in = jax.lax.psum(i_local, pre_ax)               # the ONE collective
         neurons, post_spikes = lif_step(LIFState(v=v), i_in, cfg.lif)
@@ -68,18 +83,16 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
             # fused Pallas datapath per local tile — the intrinsic-timing
             # update needs nothing beyond the device's own (pre, post) shard
             w = weight_update_depth_major(
-                w, pre_spikes, post_spikes, pre_reg, post_reg, cfg.stdp,
-                pairing=cfg.pairing, compensate=cfg.compensate, eta=cfg.eta,
+                w, pre_spikes, post_spikes, pre_read, post_read, cfg.stdp,
+                pairing=cfg.pairing, compensate=compensate, eta=cfg.eta,
                 w_min=cfg.w_min, w_max=cfg.w_max, interpret=interpret)
         else:
-            ltp = magnitudes_depth_major(pre_reg, cfg.stdp.a_plus,
-                                         cfg.stdp.tau_plus,
-                                         pairing=cfg.pairing,
-                                         compensate=cfg.compensate)
-            ltd = magnitudes_depth_major(post_reg, cfg.stdp.a_minus,
-                                         cfg.stdp.tau_minus,
-                                         pairing=cfg.pairing,
-                                         compensate=cfg.compensate)
+            ltp = rule.magnitudes_from_readout(
+                pre_read, cfg.stdp.a_plus, cfg.stdp.tau_plus,
+                depth=cfg.depth, pairing=cfg.pairing, compensate=compensate)
+            ltd = rule.magnitudes_from_readout(
+                post_read, cfg.stdp.a_minus, cfg.stdp.tau_minus,
+                depth=cfg.depth, pairing=cfg.pairing, compensate=compensate)
             ltp_en, ltd_en = pair_gate(pre_spikes[:, None],
                                        post_spikes[None, :])
             dw = ltp_en * ltp[:, None] - ltd_en * ltd[None, :]
@@ -88,30 +101,29 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
             w = _quantise(w, cfg)
         return w, post_spikes, neurons.v
 
-    sharded = jax.shard_map(
+    sharded = _shard_map(
         local_step, mesh=mesh,
         in_specs=(P(pre_ax, post_ax),      # w tile
                   P(pre_ax),               # pre spikes (sharded like rows)
-                  P(None, pre_ax),         # pre registers (depth, n_pre)
-                  P(None, post_ax),        # post registers
+                  P(None, pre_ax),         # pre readout (rows, n_pre)
+                  P(None, post_ax),        # post readout
                   P(post_ax)),             # membrane (sharded like cols)
-        out_specs=(P(pre_ax, post_ax), P(post_ax), P(post_ax)),
-        check_vma=False)
+        out_specs=(P(pre_ax, post_ax), P(post_ax), P(post_ax)))
 
     @jax.jit
     def step(state: EngineState, pre_spikes: jax.Array):
-        pre_reg = H.registers_depth_major(state.pre_hist)
-        post_reg = H.registers_depth_major(state.post_hist)
+        pre_read = rule.readout(state.pre_hist)
+        post_read = rule.readout(state.post_hist)
         w, post_spikes, v = sharded(state.w,
                                     pre_spikes.astype(jnp.float32),
-                                    pre_reg.astype(jnp.float32),
-                                    post_reg.astype(jnp.float32),
+                                    pre_read.astype(jnp.float32),
+                                    post_read.astype(jnp.float32),
                                     state.neurons.v)
         post_bool = post_spikes.astype(jnp.bool_)
         new_state = EngineState(
             w=w,
-            pre_hist=H.push(state.pre_hist, pre_spikes),
-            post_hist=H.push(state.post_hist, post_bool),
+            pre_hist=rule.step(state.pre_hist, pre_spikes, depth=cfg.depth),
+            post_hist=rule.step(state.post_hist, post_bool, depth=cfg.depth),
             neurons=type(state.neurons)(v=v),
         )
         return new_state, post_bool

@@ -1,0 +1,46 @@
+"""Shared backend dispatch + padding helpers for every kernel package.
+
+``BACKENDS`` is the canonical set of weight-update datapath selections
+understood across the whole stack (engine, sharded engine, SNN models,
+launcher, benchmarks):
+
+  * ``reference``       — pure-jnp path (``repro.core`` / the ``ref.py``
+                          oracle of each kernel package)
+  * ``fused``           — Pallas kernel compiled for the accelerator
+  * ``fused_interpret`` — the same kernel via the interpreter (CPU
+                          validation; jitted, so still fast)
+
+:func:`resolve_backend` maps a name to the ``(use_kernel, interpret)``
+pair the per-package ``ops.py`` wrappers take.  The lane/tile padding
+helpers live here too so each kernel package stops re-deriving them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128
+SUBLANE = 8
+
+BACKENDS = ("reference", "fused", "fused_interpret")
+
+
+def resolve_backend(backend: str) -> tuple[bool, bool]:
+    """Map a backend name to the ``(use_kernel, interpret)`` pair."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+    return backend != "reference", backend == "fused_interpret"
+
+
+def round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def pad_axis(x: jax.Array, n: int, axis: int) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` up to length ``n`` (no-op if equal)."""
+    pad = n - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)

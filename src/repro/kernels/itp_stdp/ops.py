@@ -10,9 +10,9 @@ points, from lowest to highest level:
   * :func:`synapse_delta`             — Δw only (no clip, no ``w`` read),
     for batched callers that accumulate over replicas before applying.
 
-``BACKENDS`` is the canonical set of datapath selections shared by
-``EngineConfig.backend`` / ``SNNConfig.backend``; :func:`resolve_backend`
-maps a name to the (use_kernel, interpret) pair these wrappers take.
+``BACKENDS`` / :func:`resolve_backend` (the canonical datapath selections
+shared by ``EngineConfig.backend`` / ``SNNConfig.backend``) live in
+``repro.kernels.dispatch`` and are re-exported here for back-compat.
 """
 from __future__ import annotations
 
@@ -21,37 +21,11 @@ import jax.numpy as jnp
 
 from repro.core.history import SpikeHistory, registers_depth_major
 from repro.core.stdp import STDPParams, po2_weights
+from repro.kernels.dispatch import BACKENDS, LANE, resolve_backend  # noqa: F401 (re-export)
+from repro.kernels.dispatch import pad_axis as _pad_to
+from repro.kernels.dispatch import round_up as _round_up
 from repro.kernels.itp_stdp.kernel import itp_stdp_update
 from repro.kernels.itp_stdp.ref import itp_stdp_update_ref
-
-LANE = 128
-
-# datapath selections understood across the engine stack (engine, sharded
-# engine, SNN models, launcher, benchmarks):
-#   reference       — pure-jnp core path (repro.core.stdp)
-#   fused           — Pallas kernel compiled for the accelerator
-#   fused_interpret — Pallas kernel in interpret mode (CPU validation)
-BACKENDS = ("reference", "fused", "fused_interpret")
-
-
-def resolve_backend(backend: str) -> tuple[bool, bool]:
-    """Map a backend name to the ``(use_kernel, interpret)`` pair."""
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
-    return backend != "reference", backend == "fused_interpret"
-
-
-def _pad_to(x: jax.Array, n: int, axis: int) -> jax.Array:
-    pad = n - x.shape[axis]
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
-
-def _round_up(n: int, m: int) -> int:
-    return ((n + m - 1) // m) * m
 
 
 def _tile(padded: int) -> int:

@@ -16,14 +16,13 @@ for both the spike and the bitplane inputs.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.stdp import STDPParams, po2_weights
+from repro.kernels.dispatch import LANE, SUBLANE
+from repro.kernels.dispatch import pad_axis as _pad_axis
+from repro.kernels.dispatch import round_up as _round_up
 from repro.kernels.itp_stdp_conv.kernel import itp_stdp_conv_delta
 from repro.kernels.itp_stdp_conv.ref import itp_stdp_conv_delta_ref
-
-LANE = 128
-SUBLANE = 8
 
 
 def im2col_2d(x: jax.Array, k: int, stride: int) -> jax.Array:
@@ -47,19 +46,6 @@ def im2col_1d(x: jax.Array, k: int, stride: int) -> jax.Array:
     Lo = p.shape[2]
     p = p.reshape(B, C, k, Lo).transpose(0, 3, 2, 1)
     return p.reshape(B, Lo, k * C)
-
-
-def _round_up(n: int, m: int) -> int:
-    return ((n + m - 1) // m) * m
-
-
-def _pad_axis(x: jax.Array, n: int, axis: int) -> jax.Array:
-    pad = n - x.shape[axis]
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
 
 
 def conv_synapse_delta(

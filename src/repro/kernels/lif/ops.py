@@ -5,14 +5,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lif import LIFParams, LIFState
+from repro.kernels.dispatch import LANE
+from repro.kernels.dispatch import round_up as _round_up
 from repro.kernels.lif.kernel import lif_update
 from repro.kernels.lif.ref import lif_update_ref
-
-LANE = 128
-
-
-def _round_up(n: int, m: int) -> int:
-    return ((n + m - 1) // m) * m
 
 
 def lif_step_kernel(state: LIFState, i_in: jax.Array, p: LIFParams,

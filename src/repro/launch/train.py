@@ -6,16 +6,19 @@ init, jitted train step, async checkpointing, restart-on-failure,
 straggler watchdog.  For the paper's own SNN training path use
 ``examples/train_snn.py`` (the learning-engine loop has no gradients).
 
-``--engine`` switches to the ITP-STDP learning-engine workload: a
-population of engine replicas trained on random rasters with the
-selectable weight-update backend (``--backend reference|fused|
-fused_interpret``), reporting synaptic-op throughput — the launcher path
-for exercising the fused Pallas datapath end-to-end.
+``--engine`` switches to the learning-engine workload: a population of
+engine replicas trained on random rasters with the selectable learning
+rule (``--rule itp|itp_nocomp|exact|linear|imstdp``) and weight-update
+backend (``--backend reference|fused|fused_interpret``), reporting
+synaptic-op throughput — the launcher path for exercising the fused
+Pallas datapath (and the counter-rule baselines) end-to-end.
 
 ``--snn <net>`` switches to the paper's network workloads (2-layer SNN,
-6-layer DCSNN, 5-layer CSNN) on the same selectable backend: the conv
-nets drive the im2col-fused conv kernel, the fc layers the dense engine
-kernel — the launcher path for the whole-network fused datapath.
+6-layer DCSNN, 5-layer CSNN) on the same selectable rule and backend:
+the conv nets drive the im2col-fused conv kernel, the fc layers the
+dense engine kernel — the launcher path for the whole-network fused
+datapath.  Kernel-less rules on fused* backends are rejected up front
+with the valid combinations (rule × backend matrix in ROADMAP.md).
 """
 from __future__ import annotations
 
@@ -24,19 +27,20 @@ import time
 
 import jax
 
+from repro import plasticity
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.data import LMBatchSpec, lm_batches
 from repro.distributed.fault_tolerance import (FailureInjector, RunnerConfig,
                                                TrainingRunner)
 from repro.distributed.sharding import use_mesh
-from repro.kernels.itp_stdp.ops import BACKENDS
+from repro.kernels.dispatch import BACKENDS
 from repro.launch.mesh import describe, make_debug_mesh
 from repro.train import (OptimizerConfig, TrainConfig, init_training,
                          make_train_step)
 
 
 def run_engine_training(args) -> dict:
-    """Population ITP-STDP training on the selected weight-update backend.
+    """Population engine training on the selected rule + backend.
 
     Trains ``--replicas`` independent engine replicas for ``--steps`` steps
     on Bernoulli rasters and reports wall-clock + synaptic-op throughput.
@@ -45,8 +49,9 @@ def run_engine_training(args) -> dict:
     from repro.core.engine import (EngineConfig, init_engine_population,
                                    run_engine_population)
 
+    rule = getattr(args, "rule", "itp")
     cfg = EngineConfig(n_pre=args.engine_pre, n_post=args.engine_post,
-                       backend=args.backend)
+                       rule=rule, backend=args.backend)
     key = jax.random.PRNGKey(0)
     states = init_engine_population(key, cfg, args.replicas)
     trains = jax.random.bernoulli(
@@ -63,6 +68,7 @@ def run_engine_training(args) -> dict:
 
     sops = args.replicas * args.steps * cfg.n_pre * cfg.n_post
     summary = {
+        "rule": rule,
         "backend": args.backend,
         "replicas": args.replicas,
         "n_pre": cfg.n_pre, "n_post": cfg.n_post, "steps": args.steps,
@@ -71,7 +77,8 @@ def run_engine_training(args) -> dict:
         "sops_per_s": sops / max(run_s, 1e-9),
         "mean_post_rate": float(post.mean()),
     }
-    print(f"engine training [{args.backend}]: {args.replicas} replicas × "
+    print(f"engine training [{rule} / {args.backend}]: "
+          f"{args.replicas} replicas × "
           f"{cfg.n_pre}×{cfg.n_post} × {args.steps} steps — "
           f"{summary['sops_per_s']:.3e} SOP/s "
           f"(compile {compile_s:.2f}s, run {run_s:.3f}s, "
@@ -80,7 +87,7 @@ def run_engine_training(args) -> dict:
 
 
 def run_snn_training(args) -> dict:
-    """One of the paper's SNNs on the selected weight-update backend.
+    """One of the paper's SNNs on the selected rule + backend.
 
     Trains the chosen network on Bernoulli rasters for ``--steps``
     simulation steps and reports wall-clock + synaptic-update throughput.
@@ -90,7 +97,8 @@ def run_snn_training(args) -> dict:
     """
     from repro.models import snn
 
-    cfg = snn.PAPER_NETWORKS[args.snn]("itp", backend=args.backend)
+    rule = getattr(args, "rule", "itp")
+    cfg = snn.PAPER_NETWORKS[args.snn](rule, backend=args.backend)
     key = jax.random.PRNGKey(0)
     state = snn.init_snn(key, cfg, args.batch)
     n_in = 1
@@ -122,14 +130,16 @@ def run_snn_training(args) -> dict:
         updates += args.batch * rows * snn._fan_in(spec, in_shape) \
             * spec.out_features
     summary = {
-        "net": cfg.name, "backend": args.backend, "batch": args.batch,
+        "net": cfg.name, "rule": rule, "backend": args.backend,
+        "batch": args.batch,
         "steps": args.steps,
         "compile_seconds": round(compile_s, 3),
         "run_seconds": round(run_s, 4),
         "sops_per_s": args.steps * updates / max(run_s, 1e-9),
         "mean_rate": float(counts.mean()) / args.steps,
     }
-    print(f"snn training [{cfg.name} / {args.backend}]: batch {args.batch} × "
+    print(f"snn training [{cfg.name} / {rule} / {args.backend}]: "
+          f"batch {args.batch} × "
           f"{args.steps} steps — {summary['sops_per_s']:.3e} SOP/s "
           f"(compile {compile_s:.2f}s, run {run_s:.3f}s, "
           f"mean rate {summary['mean_rate']:.3f})", flush=True)
@@ -146,6 +156,9 @@ def main():
                     choices=("2layer-snn", "6layer-dcsnn", "5layer-csnn"),
                     help="train one of the paper's SNNs instead of the LM "
                          "stack (conv nets exercise the fused conv kernel)")
+    ap.add_argument("--rule", default="itp", choices=plasticity.rule_names(),
+                    help="learning rule (--engine and --snn modes); "
+                         "kernel-less rules require --backend reference")
     ap.add_argument("--backend", default="reference", choices=BACKENDS,
                     help="weight-update datapath (--engine and --snn modes)")
     ap.add_argument("--engine-pre", type=int, default=256)

@@ -4,22 +4,28 @@
   * 6-layer DCSNN — Izhikevich neurons, conv stack, Fashion-MNIST-class data
   * 5-layer CSNN  — LIF neurons, 1-D conv stack, motor-fault time series
 
-All layers learn with the selectable STDP rule family ('exact' /
-'itp' (compensated) / 'itp_nocomp'), sharing one protocol so the Table II
+All layers learn with a selectable learning rule from the
+``repro.plasticity`` registry ('itp' / 'itp_nocomp' history rules, 'exact'
+/ 'linear' / 'imstdp' counter rules), sharing one protocol so the Table II
 *parity* comparison is apples-to-apples.  Convolutional STDP applies the
 pair-based rule per (patch-pixel → output-neuron) synapse, accumulated over
 spatial positions at the patch level (the dense layer is the 1×1 special
-case): conv layers route every backend through the im2col-fused kernel
-package (``repro.kernels.itp_stdp_conv``) — pure-jnp reference, compiled
-Pallas kernel, or the interpreted kernel — and fc layers through the dense
-engine kernel.  Readout is a deterministic ridge regression on
-time-averaged spike counts — identical across rules, so accuracy
-differences isolate the learning rule.
+case): for the history rules conv layers route every backend through the
+im2col-fused kernel package (``repro.kernels.itp_stdp_conv``) — pure-jnp
+reference, compiled Pallas kernel, or the interpreted kernel — and fc
+layers through the dense engine kernel; counter rules take the reference
+magnitude-readout path (fused* is rejected at config construction).
+Readout is a deterministic ridge regression on time-averaged spike counts
+— identical across rules, so accuracy differences isolate the learning
+rule.
 
-Weight-update magnitudes come from the same bitplane histories as the
-learning engine: ``exact``/``itp`` read the history against e^(-k/τ) ≡
-2^(-k/(τ·ln2)) (identical by eq. 18 — the paper's equivalence), while
-``itp_nocomp`` reads against the raw po2 place values 2^(-k/τ).
+For the history rules, weight-update magnitudes come from the same
+bitplane histories as the learning engine: ``itp`` reads the history
+against e^(-k/τ) ≡ 2^(-k/(τ·ln2)) (identical by eq. 18 — the paper's
+equivalence), ``itp_nocomp`` against the raw po2 place values 2^(-k/τ).
+The counter rule ``exact`` evaluates e^(-Δt/τ) from last-spike counters —
+trajectory-identical to compensated ``itp`` on the integer grid, which is
+exactly the paper's equivalence claim.
 """
 from __future__ import annotations
 
@@ -30,11 +36,11 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.history import (SpikeHistory, as_register, init_history,
-                                push, registers_depth_major)
+from repro import plasticity
+from repro.core.history import registers_depth_major
 from repro.core.lif import (IzhikevichParams, LIFParams, izhikevich_init,
                             izhikevich_step, lif_init, lif_step)
-from repro.core.stdp import STDPParams, po2_weights
+from repro.core.stdp import STDPParams
 from repro.kernels.itp_stdp.ops import resolve_backend, synapse_delta
 from repro.kernels.itp_stdp_conv.ops import (conv_synapse_delta, im2col_1d,
                                              im2col_2d)
@@ -59,7 +65,7 @@ class SNNConfig:
     input_shape: tuple            # (H, W, C) images / (L, C) series / (N,) flat
     layers: tuple                 # tuple[SNNLayerSpec, ...]
     neuron: str = "lif"           # lif | izhikevich
-    rule: str = "itp"             # exact | itp | itp_nocomp
+    rule: str = "itp"             # plasticity.rule_names()
     depth: int = 7                # spike-history depth (§IV-B)
     pairing: str = "nearest"
     eta: float = 1.0 / 64.0
@@ -75,13 +81,23 @@ class SNNConfig:
     izhi: IzhikevichParams = dataclasses.field(default_factory=IzhikevichParams)
 
     def __post_init__(self):
-        resolve_backend(self.backend)   # validates against BACKENDS
+        # config-construction-time validation of the rule × backend cell
+        # (unknown names list the valid options; kernel-less rules reject
+        # the fused* backends) and the rule's pairing support
+        rule = plasticity.get_rule(self.rule)
+        plasticity.resolve_rule_backend(rule, self.backend)
+        rule.check_pairing(self.pairing)
+
+    def learning_rule(self) -> plasticity.LearningRule:
+        return plasticity.get_rule(self.rule)
 
     @property
     def compensate(self) -> bool:
         # 'exact' and compensated 'itp' are numerically identical on the
-        # integer delay grid (paper eq. 18) — both read e^(-k/τ).
-        return self.rule in ("exact", "itp")
+        # integer delay grid (paper eq. 18) — both read e^(-k/τ);
+        # 'itp_nocomp' pins the raw po2 read via its rule override.
+        rc = self.learning_rule().compensate
+        return True if rc is None else rc
 
 
 # The paper's three networks -------------------------------------------------
@@ -182,8 +198,8 @@ def feature_size(cfg: SNNConfig) -> int:
 
 class LayerState(NamedTuple):
     neurons: Any                 # LIFState | IzhikevichState | None (pool)
-    pre_hist: SpikeHistory | None
-    post_hist: SpikeHistory | None
+    pre_hist: Any                # rule timing state (histories / counters)
+    post_hist: Any
 
 
 class SNNState(NamedTuple):
@@ -223,33 +239,35 @@ def init_snn(key: jax.Array, cfg: SNNConfig, batch: int) -> SNNState:
             w = jax.random.uniform(sub, (fi, spec.out_features),
                                    minval=0.2, maxval=0.8)
             weights.append(w.astype(jnp.float32))
+            rule = cfg.learning_rule()
             n_pre = batch * int(jnp.prod(jnp.asarray(in_shape)))
             n_post = batch * int(jnp.prod(jnp.asarray(out_shape)))
             states.append(LayerState(
                 neurons=_neuron_init(cfg, (batch,) + out_shape),
-                pre_hist=init_history(n_pre, cfg.depth),
-                post_hist=init_history(n_post, cfg.depth),
+                pre_hist=rule.init_state(n_pre, cfg.depth),
+                post_hist=rule.init_state(n_post, cfg.depth),
             ))
         in_shape = out_shape
     return SNNState(weights=tuple(weights), layers=tuple(states))
 
 
 # ---------------------------------------------------------------------------
-# STDP magnitude readout from histories (shared by fc and conv paths)
+# Per-neuron Δw magnitude readout (shared by fc and conv reference paths)
 # ---------------------------------------------------------------------------
 
-def _hist_magnitude(hist: SpikeHistory, shape: tuple, amplitude: float,
+def _rule_magnitude(state: Any, shape: tuple, amplitude: float,
                     tau: float, cfg: SNNConfig) -> jax.Array:
-    """Per-neuron Δw magnitude read from the history register (Figs. 2-3).
+    """Per-neuron Δw magnitude read from the rule's timing state.
 
-    Returns (B, *shape) f32; nearest-neighbour keeps only the MSB spike,
-    all-to-all reads the full fixed-point word.
+    History rules read the bitplane register (Figs. 2-3: nearest-neighbour
+    keeps only the MSB spike, all-to-all the full fixed-point word);
+    counter rules evaluate their window function on the last-spike delay.
+    Returns (B, *shape) f32.
     """
-    reg = as_register(hist).astype(jnp.float32)       # (N, depth)
-    if cfg.pairing == "nearest":
-        reg = reg * (jnp.cumsum(reg, axis=-1) == 1.0)
-    w = po2_weights(cfg.depth, tau, compensate=cfg.compensate)
-    return (amplitude * reg @ w).reshape(shape)
+    mags = cfg.learning_rule().magnitudes(
+        state, amplitude, tau, depth=cfg.depth, pairing=cfg.pairing,
+        compensate=cfg.compensate)
+    return mags.reshape(shape)
 
 
 def _quantise(w: jax.Array, cfg: SNNConfig) -> jax.Array:
@@ -318,6 +336,33 @@ def _conv_delta(cfg: SNNConfig, spec: SNNLayerSpec, st: "LayerState",
         interpret=interpret)
 
 
+def _counter_conv_delta(cfg: SNNConfig, spec: SNNLayerSpec, st: "LayerState",
+                        patches: jax.Array, s_out: jax.Array,
+                        in_shape: tuple) -> jax.Array:
+    """Patch-level Δw for a conv layer under a kernel-less (counter) rule.
+
+    Counter rules carry one last-spike delay per neuron, so the per-source-
+    pixel LTP magnitudes are read first and then gathered into the im2col
+    patch layout (readout commutes with the gather — each patch element's
+    magnitude depends only on its source pixel), followed by the same
+    pair-gated patch-row contraction as the history-rule oracle.
+    Reference backend only; fused* is rejected at config construction.
+    """
+    B = s_out.shape[0]
+    im2col = im2col_2d if spec.kind == "conv2d" else im2col_1d
+    ltp = _rule_magnitude(st.pre_hist, (B,) + tuple(in_shape),
+                          cfg.stdp.a_plus, cfg.stdp.tau_plus, cfg)
+    ltp_p = im2col(ltp, spec.kernel, spec.stride)
+    ltp_p = ltp_p.reshape(-1, patches.shape[-1])     # (M, K)
+    ltd = _rule_magnitude(st.post_hist, (-1, s_out.shape[-1]),
+                          cfg.stdp.a_minus, cfg.stdp.tau_minus, cfg)  # (M, C)
+    pre = patches.reshape(-1, patches.shape[-1])
+    post = s_out.reshape(-1, s_out.shape[-1])
+    dw_ltp = jnp.einsum("mk,mc->kc", (1.0 - pre) * ltp_p, post)
+    dw_ltd = jnp.einsum("mk,mc->kc", pre, (1.0 - post) * ltd)
+    return dw_ltp - dw_ltd
+
+
 # ---------------------------------------------------------------------------
 # Layer steps
 # ---------------------------------------------------------------------------
@@ -355,8 +400,8 @@ def _learnable_step(spec: SNNLayerSpec, cfg: SNNConfig, w: jax.Array,
 
     # --- lateral inhibition (2-layer SNN soft WTA) -----------------------
     if cfg.inhibition > 0.0 and st.post_hist is not None:
-        prev = as_register(st.post_hist)[:, 0].reshape(i_in.shape[0], -1)
-        prev = prev.reshape(i_in.shape)
+        prev = cfg.learning_rule().last_spikes(st.post_hist)
+        prev = prev.reshape(i_in.shape[0], -1).reshape(i_in.shape)
         total = jnp.sum(prev, axis=-1, keepdims=True)
         i_in = i_in - cfg.inhibition * (total - prev)
 
@@ -375,25 +420,36 @@ def _learnable_step(spec: SNNLayerSpec, cfg: SNNConfig, w: jax.Array,
         neurons, spikes_out = lif_step(st.neurons, i_flat, cfg.lif)
     s_out = spikes_out.astype(jnp.float32)
 
-    # --- ITP-STDP update --------------------------------------------------
+    # --- STDP update (dispatched through the selected LearningRule) -------
+    rule = cfg.learning_rule()
     if train and spec.kind != "fc":
-        # conv layers: patch-level im2col-fused kernel package, all three
-        # backends (reference oracle / compiled Pallas / interpreted)
-        dw = _conv_delta(cfg, spec, st, patches, s_out, spikes_in.shape[1:])
+        if rule.has_kernel:
+            # history rules: patch-level im2col-fused kernel package, all
+            # three backends (reference oracle / compiled Pallas /
+            # interpreted)
+            dw = _conv_delta(cfg, spec, st, patches, s_out,
+                             spikes_in.shape[1:])
+        else:
+            # counter rules: magnitude readout gathered into the patch
+            # layout (reference only)
+            dw = _counter_conv_delta(cfg, spec, st, patches, s_out,
+                                     spikes_in.shape[1:])
         denom = float(B * patches.shape[1])
         w = jnp.clip(w + cfg.eta * dw / denom, 0.0, 1.0)
         w = _quantise(w, cfg)
     elif train and cfg.backend != "reference":
-        # fused engine datapath: per-sample Δw from the Pallas kernel,
-        # batch-accumulated, then the same clip + quantise as the reference
+        # fused engine datapath (history rules only — config validation
+        # rejects kernel-less rules on fused*): per-sample Δw from the
+        # Pallas kernel, batch-accumulated, then the same clip + quantise
+        # as the reference
         dw = _fused_fc_delta(cfg, st, s_in, s_out)
         denom = float(B)                               # P = 1 for fc
         w = jnp.clip(w + cfg.eta * dw / denom, 0.0, 1.0)
         w = _quantise(w, cfg)
     elif train:
-        ltp = _hist_magnitude(st.pre_hist, spikes_in.shape, cfg.stdp.a_plus,
+        ltp = _rule_magnitude(st.pre_hist, spikes_in.shape, cfg.stdp.a_plus,
                               cfg.stdp.tau_plus, cfg)      # (B,*in)
-        ltd = _hist_magnitude(st.post_hist, out_shape, cfg.stdp.a_minus,
+        ltd = _rule_magnitude(st.post_hist, out_shape, cfg.stdp.a_minus,
                               cfg.stdp.tau_minus, cfg)     # (B,*out)
         ltp_p = ltp.reshape(B, 1, -1)                      # (B, P=1, fan_in)
         pre_p = patches
@@ -407,11 +463,11 @@ def _learnable_step(spec: SNNLayerSpec, cfg: SNNConfig, w: jax.Array,
         w = jnp.clip(w + cfg.eta * (dw_ltp - dw_ltd) / denom, 0.0, 1.0)
         w = _quantise(w, cfg)
 
-    # --- shift-in new spikes ----------------------------------------------
+    # --- record new spikes (history shift-in / counter reset) ------------
     st = LayerState(
         neurons=neurons,
-        pre_hist=push(st.pre_hist, s_in.reshape(-1)),
-        post_hist=push(st.post_hist, s_out.reshape(-1)),
+        pre_hist=rule.step(st.pre_hist, s_in.reshape(-1), depth=cfg.depth),
+        post_hist=rule.step(st.post_hist, s_out.reshape(-1), depth=cfg.depth),
     )
     return w, st, spikes_out
 

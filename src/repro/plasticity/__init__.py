@@ -1,0 +1,22 @@
+"""Pluggable learning rules: the API seam for the paper's STDP-variant
+comparison (rule × backend matrix in ROADMAP.md)."""
+
+from repro.plasticity.base import (
+    BACKENDS,
+    RULES,
+    LearningRule,
+    get_rule,
+    kernel_rule_names,
+    register_rule,
+    resolve_rule_backend,
+    rule_names,
+)
+from repro.plasticity.rules import (
+    EXACT,
+    IMSTDP,
+    ITP,
+    ITP_NOCOMP,
+    LINEAR,
+    CounterRule,
+    HistoryRule,
+)

@@ -1,0 +1,193 @@
+"""First-class learning-rule abstraction for the update path.
+
+The paper's headline results are *comparative*: ITP-STDP against the
+original counter-based exact STDP and simpler approximations on the same
+networks.  A :class:`LearningRule` owns everything rule-specific about
+the weight-update path:
+
+  * ``init_state``  — the per-population timing state (bitplane spike
+                      histories for the intrinsic-timing rules, last-spike
+                      counters for the conventional Δt-based rules);
+  * ``delta``       — the dense (n_pre × n_post) weight increment read
+                      from that state under the XOR pair gate (§V-A);
+  * ``step``        — recording the current step's spikes into the state
+                      (the hardware 'shift-in' / counter reset).
+
+Per-neuron ``magnitudes`` (the rank-1 readout the engine, the SNN layers
+and the sharded engine all build on) and a dense ``readout`` view (for
+``shard_map``, which needs plain arrays) are part of the protocol too.
+
+Rules register by name; ``EngineConfig.rule`` / ``SNNConfig.rule`` select
+one alongside ``backend``.  Only rules with ``has_kernel=True`` (the
+intrinsic-timing family, whose state *is* the kernel operand) can ride
+the fused Pallas datapaths — :func:`resolve_rule_backend` rejects
+kernel-less rule + ``fused*`` combinations at config-construction time
+with the full option list, so the rule × backend matrix (ROADMAP) is
+explicit rather than discovered at trace time.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any
+
+import jax
+
+from repro.core.stdp import STDPParams, pair_gate
+from repro.kernels.dispatch import BACKENDS, resolve_backend
+
+
+class LearningRule(abc.ABC):
+    """Protocol every STDP-variant learning rule implements.
+
+    ``name`` is the registry key; ``has_kernel`` marks rules whose state
+    layout the fused Pallas kernels consume; ``compensate`` is ``None``
+    when the rule defers to the config's compensation flag (the default
+    'itp' behaviour) or a hard ``True``/``False`` override.
+    """
+
+    name: str = ""
+    has_kernel: bool = False
+    compensate: bool | None = None
+
+    # -- state ---------------------------------------------------------
+    @abc.abstractmethod
+    def init_state(self, n: int, depth: int) -> Any:
+        """Fresh timing state for a population of ``n`` neurons."""
+
+    @abc.abstractmethod
+    def step(self, state: Any, spikes: jax.Array, *, depth: int) -> Any:
+        """Record the current step's spikes (shift-in / counter reset)."""
+
+    # -- readout -------------------------------------------------------
+    @abc.abstractmethod
+    def readout(self, state: Any) -> jax.Array:
+        """Dense ``(rows, n)`` float view of the state for shard_map.
+
+        Row count is rule-specific (``depth`` bitplane rows for history
+        rules, one counter row for Δt rules); shards along axis 1.
+        """
+
+    @abc.abstractmethod
+    def magnitudes_from_readout(
+        self,
+        arr: jax.Array,
+        amplitude: float,
+        tau: float,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+    ) -> jax.Array:
+        """Per-neuron Δw magnitude ``(n,)`` from a :meth:`readout` view."""
+
+    def magnitudes(
+        self,
+        state: Any,
+        amplitude: float,
+        tau: float,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+    ) -> jax.Array:
+        """Per-neuron Δw magnitude ``(n,)`` read from the timing state."""
+        arr = self.readout(state)
+        return self.magnitudes_from_readout(
+            arr, amplitude, tau, depth=depth, pairing=pairing, compensate=compensate
+        )
+
+    def last_spikes(self, state: Any) -> jax.Array:
+        """``(n,)`` f32 indicator of a spike on the previous step.
+
+        Used by the lateral-inhibition path; rules expose the k=0 view of
+        their timing state (1 iff the most recent recorded event was a
+        spike).
+        """
+        raise NotImplementedError
+
+    def check_pairing(self, pairing: str) -> None:
+        """Raise ``ValueError`` if the rule cannot express ``pairing``."""
+        if pairing not in ("nearest", "all"):
+            raise ValueError(f"pairing must be 'nearest' or 'all', got {pairing!r}")
+
+    # -- dense update --------------------------------------------------
+    def delta(
+        self,
+        pre_state: Any,
+        post_state: Any,
+        pre_spikes: jax.Array,
+        post_spikes: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+    ) -> jax.Array:
+        """Raw pair-gated ``(n_pre, n_post)`` Δw (no eta, clip, quantise).
+
+        Default: rank-1 gated outer product of the per-neuron magnitudes
+        — the intrinsic-timing datapath.  Δt-based rules override this
+        with their deliberately per-pair formulation so the measured cost
+        asymmetry (benchmarks/rule_cost.py) reflects the conventional
+        datapath the paper optimises away.
+        """
+        ltp = self.magnitudes(
+            pre_state, p.a_plus, p.tau_plus, depth=depth, pairing=pairing, compensate=compensate
+        )
+        ltd = self.magnitudes(
+            post_state, p.a_minus, p.tau_minus, depth=depth, pairing=pairing, compensate=compensate
+        )
+        ltp_en, ltd_en = pair_gate(pre_spikes[:, None], post_spikes[None, :])
+        return ltp_en * ltp[:, None] - ltd_en * ltd[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+RULES: dict[str, LearningRule] = {}
+
+
+def register_rule(rule: LearningRule) -> LearningRule:
+    """Add ``rule`` to the registry (keyed by ``rule.name``)."""
+    if not rule.name:
+        raise ValueError("learning rule must carry a non-empty name")
+    RULES[rule.name] = rule
+    return rule
+
+
+def rule_names() -> tuple[str, ...]:
+    return tuple(sorted(RULES))
+
+
+def get_rule(name: str) -> LearningRule:
+    """Look up a registered rule; unknown names list the valid options."""
+    try:
+        return RULES[name]
+    except KeyError as e:
+        raise ValueError(f"unknown learning rule {name!r}; have {rule_names()}") from e
+
+
+def kernel_rule_names() -> tuple[str, ...]:
+    return tuple(sorted(n for n, r in RULES.items() if r.has_kernel))
+
+
+def resolve_rule_backend(rule: str | LearningRule, backend: str) -> tuple[bool, bool]:
+    """Validate a (rule, backend) cell and map it to (use_kernel, interpret).
+
+    Unknown rule or backend names raise ``ValueError`` listing the valid
+    options; a kernel-less rule on a ``fused*`` backend is rejected with
+    the actionable alternatives (the ROADMAP rule × backend matrix).
+    """
+    if isinstance(rule, str):
+        rule = get_rule(rule)
+    use_kernel, interpret = resolve_backend(backend)
+    if use_kernel and not rule.has_kernel:
+        raise ValueError(
+            f"rule {rule.name!r} has no fused kernel: backend {backend!r} is "
+            f"only available for the kernel-backed rules "
+            f"{kernel_rule_names()}; use backend='reference' for "
+            f"{rule.name!r} (valid backends: {BACKENDS})"
+        )
+    return use_kernel, interpret

@@ -1,0 +1,191 @@
+"""The registered learning rules: the paper's rule hierarchy as state
+machines (curve-level forms live in ``repro.core.stdp``).
+
+Two families, matching the paper's §I taxonomy:
+
+  * :class:`HistoryRule` — intrinsic timing (this work).  State is the
+    bitplane spike history; the timing difference is never computed: the
+    register read *is* the update (eq. 2 / Fig. 3).  ``itp`` (compensated
+    by default, eq. 18) and ``itp_nocomp`` (raw po2, §IV-A error bound).
+    These are the rules the fused Pallas kernels implement.
+
+  * :class:`CounterRule` — conventional explicit-Δt datapaths.  State is
+    a per-neuron last-spike counter (saturating at ``depth``); on an
+    update the per-pair timing difference is formed and a window function
+    evaluated per synapse — the O(n²) transcendental work Tables III-V
+    monetise.  ``exact`` (base-e exponential, [26]/[28]-style — the
+    CounterEngine of ``repro.core.baseline`` folded into the rule API),
+    ``linear`` (the PWL approximation of [24]) and ``imstdp`` (the
+    integer-grid LUT of [23]).  Reference (jnp) backend only.
+
+A counter at value t means the neuron last spiked t steps ago (t=0: the
+previous step — spikes are recorded *after* the weight update, exactly
+like the history shift-in), so nearest-neighbour magnitudes agree with
+the history read on the integer grid: ``exact`` with the same ``depth``
+is trajectory-identical to compensated ``itp`` — the paper's equivalence
+claim, pinned by tests/test_plasticity.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import history as H
+from repro.core.stdp import STDPParams, magnitudes_depth_major, pair_gate
+from repro.plasticity.base import LearningRule, register_rule
+
+
+@dataclasses.dataclass(frozen=True)
+class HistoryRule(LearningRule):
+    """Intrinsic-timing po2 rule: bitplane-history state, register-read Δw."""
+
+    name: str = "itp"
+    has_kernel: bool = True
+    compensate: bool | None = None  # None: defer to the config flag
+
+    def init_state(self, n: int, depth: int) -> H.SpikeHistory:
+        return H.init_history(n, depth)
+
+    def step(self, state: H.SpikeHistory, spikes: jax.Array, *, depth: int) -> H.SpikeHistory:
+        del depth  # state carries it
+        return H.push(state, spikes)
+
+    def readout(self, state: H.SpikeHistory) -> jax.Array:
+        return H.registers_depth_major(state)  # (depth, n), k=0 newest
+
+    def magnitudes_from_readout(
+        self,
+        arr: jax.Array,
+        amplitude: float,
+        tau: float,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+    ) -> jax.Array:
+        # the rule's compensate override (itp_nocomp) is resolved once at
+        # the config level (EngineConfig.effective_compensate /
+        # SNNConfig.compensate) — callers pass the resolved flag
+        del depth  # arr carries it
+        return magnitudes_depth_major(arr, amplitude, tau, pairing=pairing, compensate=compensate)
+
+    def last_spikes(self, state: H.SpikeHistory) -> jax.Array:
+        return H.as_register(state)[:, 0].astype(jnp.float32)
+
+
+def _window_exact(dt: jax.Array, amplitude: float, tau: float, depth: int) -> jax.Array:
+    del depth
+    return amplitude * jnp.exp(-dt / tau)
+
+
+def _window_linear(dt: jax.Array, amplitude: float, tau: float, depth: int) -> jax.Array:
+    # PWL of [24]: matched value/slope at dt=0, zero at the 2τ window edge
+    del depth
+    return amplitude * jnp.clip(1.0 - dt / (2.0 * tau), 0.0, 1.0)
+
+
+def _window_imstdp(dt: jax.Array, amplitude: float, tau: float, depth: int) -> jax.Array:
+    # LUT of [23] on the integer index grid; counters are already integer,
+    # so the lookup loses nothing — the storage/op cost, not the values,
+    # is what differs from 'exact' here (benchmarks/engine_cost.OP_MODEL).
+    # One row per valid delay: the validity gate zeroes everything past
+    # depth-1, so the clip never aliases a live delay onto the last row.
+    lut = amplitude * jnp.exp(-jnp.arange(depth, dtype=jnp.float32) / tau)
+    k = jnp.clip(dt.astype(jnp.int32), 0, depth - 1)
+    return lut[k]
+
+
+_WINDOWS = {"exact": _window_exact, "linear": _window_linear, "imstdp": _window_imstdp}
+
+
+@dataclasses.dataclass(frozen=True)
+class CounterRule(LearningRule):
+    """Conventional Δt-based STDP: last-spike counters + per-pair window.
+
+    Nearest-neighbour only (one counter holds one spike time); reference
+    backend only (no fused kernel — the point of the comparison).  A
+    counter saturates at ``depth`` (one past the last valid delay
+    ``depth-1``), mirroring the finite history window of the po2 rules.
+    """
+
+    name: str = "exact"
+    window: str = "exact"
+    has_kernel: bool = False
+    compensate: bool | None = None
+
+    def _window_fn(self):
+        return _WINDOWS[self.window]
+
+    def init_state(self, n: int, depth: int) -> jax.Array:
+        # start saturated-invalid: no spike within the window yet
+        return jnp.full((n,), depth, jnp.int32)
+
+    def step(self, state: jax.Array, spikes: jax.Array, *, depth: int) -> jax.Array:
+        fired = jnp.asarray(spikes).astype(bool)
+        return jnp.where(fired, 0, jnp.minimum(state + 1, depth)).astype(jnp.int32)
+
+    def readout(self, state: jax.Array) -> jax.Array:
+        return state.astype(jnp.float32)[None, :]  # (1, n)
+
+    def check_pairing(self, pairing: str) -> None:
+        if pairing != "nearest":
+            raise ValueError(
+                f"rule {self.name!r} is counter-based (one last-spike time "
+                f"per neuron) and supports pairing='nearest' only, got "
+                f"{pairing!r}"
+            )
+
+    def magnitudes_from_readout(
+        self,
+        arr: jax.Array,
+        amplitude: float,
+        tau: float,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+    ) -> jax.Array:
+        self.check_pairing(pairing)
+        t = arr[0]
+        valid = t <= depth - 1
+        return self._window_fn()(t, amplitude, tau, depth) * valid
+
+    def last_spikes(self, state: jax.Array) -> jax.Array:
+        return (state == 0).astype(jnp.float32)
+
+    def delta(
+        self,
+        pre_state: jax.Array,
+        post_state: jax.Array,
+        pre_spikes: jax.Array,
+        post_spikes: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+    ) -> jax.Array:
+        """Deliberately per-pair: Δt is broadcast to every synapse and the
+        window evaluated per pair — the conventional O(n²) datapath the
+        intrinsic-timing representation collapses to a register read
+        (the measured-cost basis of benchmarks/rule_cost.py)."""
+        self.check_pairing(pairing)
+        fn = self._window_fn()
+        dt_ltp = pre_state[:, None].astype(jnp.float32)  # (n_pre, 1)
+        dt_ltd = post_state[None, :].astype(jnp.float32)  # (1, n_post)
+        ltp_valid = pre_state[:, None] <= depth - 1
+        ltd_valid = post_state[None, :] <= depth - 1
+        ltp_mag = fn(dt_ltp, p.a_plus, p.tau_plus, depth) * ltp_valid
+        ltd_mag = fn(dt_ltd, p.a_minus, p.tau_minus, depth) * ltd_valid
+        ltp_en, ltd_en = pair_gate(pre_spikes[:, None], post_spikes[None, :])
+        return ltp_en * ltp_mag - ltd_en * ltd_mag
+
+
+ITP = register_rule(HistoryRule(name="itp", compensate=None))
+ITP_NOCOMP = register_rule(HistoryRule(name="itp_nocomp", compensate=False))
+EXACT = register_rule(CounterRule(name="exact", window="exact"))
+LINEAR = register_rule(CounterRule(name="linear", window="linear"))
+IMSTDP = register_rule(CounterRule(name="imstdp", window="imstdp"))

@@ -103,10 +103,11 @@ def test_launcher_engine_mode_smoke():
 
     from repro.launch.train import run_engine_training
 
-    args = argparse.Namespace(backend="fused_interpret", engine_pre=32,
-                              engine_post=32, replicas=2, steps=8,
-                              engine_rate=0.3)
+    args = argparse.Namespace(rule="itp", backend="fused_interpret",
+                              engine_pre=32, engine_post=32, replicas=2,
+                              steps=8, engine_rate=0.3)
     summary = run_engine_training(args)
+    assert summary["rule"] == "itp"
     assert summary["backend"] == "fused_interpret"
     assert summary["sops_per_s"] > 0
     assert np.isfinite(summary["mean_post_rate"])

@@ -249,6 +249,64 @@ def test_dp_profile_batch_axes():
         assert batch_axes(mesh) == ("data",)
 
 
+# ---------------------------------------------------------------------------
+# Sharded-engine parity (fast, single-device mesh — no subprocess)
+# ---------------------------------------------------------------------------
+# The forced-8-device subprocess variant below is known-hanging (ROADMAP);
+# these run the same shard_map program on a 1×1 mesh over the default CPU
+# device, so the collective schedule and the per-tile update path (incl.
+# the fused Pallas kernel via the interpreter) are exercised in-process.
+
+@pytest.mark.parametrize("backend,rule", [
+    ("reference", "itp"),
+    ("reference", "exact"),
+    ("fused_interpret", "itp"),
+    ("fused_interpret", "itp_nocomp"),
+])
+def test_sharded_engine_parity_single_device(key, backend, rule):
+    from repro.core.engine import EngineConfig, init_engine, run_engine
+    from repro.core.engine_sharded import (make_sharded_engine_step,
+                                           shard_engine_state)
+
+    cfg = EngineConfig(n_pre=16, n_post=8, eta=0.25, rule=rule,
+                       backend=backend)
+    state0 = init_engine(key, cfg)
+    train = jax.random.bernoulli(key, 0.4, (20, 16))
+    ref_state, ref_post = run_engine(state0, train, cfg)
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with mesh:
+        st = shard_engine_state(init_engine(key, cfg), mesh)
+        step = make_sharded_engine_step(cfg, mesh)
+        posts = []
+        for t in range(train.shape[0]):
+            st, post = step(st, train[t])
+            posts.append(np.asarray(post))
+    np.testing.assert_allclose(np.asarray(ref_state.w), np.asarray(st.w),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ref_post), np.stack(posts))
+
+
+def test_sharded_engine_quantised_single_device(key):
+    from repro.core.engine import EngineConfig, init_engine, run_engine
+    from repro.core.engine_sharded import (make_sharded_engine_step,
+                                           shard_engine_state)
+
+    cfg = EngineConfig(n_pre=8, n_post=8, eta=0.5, quantise=True,
+                       backend="fused_interpret")
+    state0 = init_engine(key, cfg)
+    train = jax.random.bernoulli(key, 0.4, (12, 8))
+    ref_state, _ = run_engine(state0, train, cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with mesh:
+        st = shard_engine_state(init_engine(key, cfg), mesh)
+        step = make_sharded_engine_step(cfg, mesh)
+        for t in range(train.shape[0]):
+            st, _ = step(st, train[t])
+    np.testing.assert_allclose(np.asarray(ref_state.w), np.asarray(st.w),
+                               rtol=1e-5, atol=1e-6)
+
+
 SHARDED_ENGINE_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
