@@ -11,17 +11,25 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# the scratch file lives in the same directory as the target (os.replace
+# must not cross filesystems) but under a gitignored name (`.bench-*.tmp`,
+# see .gitignore): a run killed between write and rename never leaves an
+# untracked stray that matches a tracked BENCH_* pattern in the repo root
+_TMP_PREFIX = ".bench-"
+_TMP_SUFFIX = ".tmp"
 
 
 def update_bench_json(name: str, updates: dict) -> str:
     """Merge ``updates`` into the repo-root file ``name``; returns the path.
 
-    The write is atomic (temp file + rename) so a killed run can never
-    leave a truncated trajectory behind; an unreadable pre-existing file
-    still fails loudly rather than being silently reset, since it holds
-    the sibling modules' sections.
+    The write is atomic (gitignored temp file + rename) so a killed run can
+    never leave a truncated trajectory — or a stray tracked-pattern file —
+    behind; an unreadable pre-existing file still fails loudly rather than
+    being silently reset, since it holds the sibling modules' sections.
     """
     path = os.path.join(REPO_ROOT, name)
     data: dict = {}
@@ -29,8 +37,24 @@ def update_bench_json(name: str, updates: dict) -> str:
         with open(path) as f:
             data = json.load(f)
     data.update(updates)
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(data, f, indent=1)
-    os.replace(tmp, path)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), prefix=_TMP_PREFIX, suffix=_TMP_SUFFIX)
+    try:
+        # mkstemp creates 0600 scratch files; os.replace would propagate
+        # that onto the tracked artifact, so restore the normal
+        # umask-derived mode (or the target's existing one) first
+        umask = os.umask(0)
+        os.umask(umask)
+        mode = os.stat(path).st_mode & 0o777 if os.path.exists(path) else 0o666 & ~umask
+        os.fchmod(fd, mode)
+        with os.fdopen(fd, "w") as f:
+            json.dump(data, f, indent=1)
+        os.replace(tmp, path)
+    except BaseException:
+        # best-effort cleanup on any interrupt (KeyboardInterrupt included);
+        # even if this unlink loses the race, the name is gitignored
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     return path

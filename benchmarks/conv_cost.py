@@ -19,9 +19,10 @@ import jax.numpy as jnp
 
 from benchmarks.bench_io import update_bench_json
 from benchmarks.engine_cost import fused_backend_name
+from repro.core.history import pack_bitplanes
 from repro.core.stdp import STDPParams
 from repro.kernels.itp_stdp.ops import resolve_backend
-from repro.kernels.itp_stdp_conv.ops import conv_synapse_delta
+from repro.kernels.itp_stdp_conv.ops import conv_synapse_delta, conv_synapse_delta_packed
 
 DEPTH = 7
 
@@ -43,8 +44,14 @@ def measure_conv_update(
     backend: str,
     t_steps: int,
     seed: int = 0,
+    packed: bool = False,
 ) -> float:
-    """Best wall-clock of a jitted t_steps scan of the conv weight update."""
+    """Best wall-clock of a jitted t_steps scan of the conv weight update.
+
+    ``packed=True`` feeds the fused kernel one uint8 history word per patch
+    element (``conv_synapse_delta_packed``) instead of the ``(depth, M, ·)``
+    float32 bitplane patches — the storage-format axis of the grid.
+    """
     use_kernel, interpret = resolve_backend(backend)
     ks = jax.random.split(jax.random.PRNGKey(seed), 4)
     pre = jax.random.bernoulli(ks[0], 0.3, (t_steps, m, kk))
@@ -53,16 +60,33 @@ def measure_conv_update(
     post_bits = jax.random.bernoulli(ks[3], 0.2, (t_steps, DEPTH, m, cc))
     params = STDPParams()
 
-    def step(w, xs):
-        p, q, pb, qb = xs
-        dw = conv_synapse_delta(
-            p, q, pb, qb, params, use_kernel=use_kernel, interpret=interpret
-        )
-        return jnp.clip(w + dw / float(m), 0.0, 1.0), None
+    if packed:
+        # (t, m, ·) uint8 words via the canonical packer (depth axis first)
+        pre_words = jax.vmap(pack_bitplanes)(pre_bits)
+        post_words = jax.vmap(pack_bitplanes)(post_bits)
+
+        def step(w, xs):
+            p, q, pw, qw = xs
+            dw = conv_synapse_delta_packed(
+                p, q, pw, qw, params, depth=DEPTH, use_kernel=use_kernel, interpret=interpret
+            )
+            return jnp.clip(w + dw / float(m), 0.0, 1.0), None
+
+        operands = (pre, post, pre_words, post_words)
+    else:
+
+        def step(w, xs):
+            p, q, pb, qb = xs
+            dw = conv_synapse_delta(
+                p, q, pb, qb, params, use_kernel=use_kernel, interpret=interpret
+            )
+            return jnp.clip(w + dw / float(m), 0.0, 1.0), None
+
+        operands = (pre, post, pre_bits, post_bits)
 
     @jax.jit
     def run_scan(w):
-        out, _ = jax.lax.scan(step, w, (pre, post, pre_bits, post_bits))
+        out, _ = jax.lax.scan(step, w, operands)
         return out
 
     w0 = jnp.full((kk, cc), 0.5, jnp.float32)
@@ -83,6 +107,7 @@ def run(out_dir: str = "experiments/bench", verbose: bool = True, quick: bool = 
         rows_m = m * batch
         ref_s = measure_conv_update(rows_m, kk, cc, "reference", t_steps)
         fused_s = measure_conv_update(rows_m, kk, cc, fused_name, t_steps)
+        packed_s = measure_conv_update(rows_m, kk, cc, fused_name, t_steps, packed=True)
         sops = rows_m * kk * cc * t_steps
         rows.append(
             {
@@ -95,6 +120,13 @@ def run(out_dir: str = "experiments/bench", verbose: bool = True, quick: bool = 
                 "reference_sops_per_s": sops / ref_s,
                 "fused_sops_per_s": sops / fused_s,
                 "fused_speedup": ref_s / fused_s,
+                # packed uint8 history words vs unpacked f32 bitplane
+                # patches into the same fused kernel (per-step bytes are
+                # the pre+post history operands)
+                "packed_sops_per_s": sops / packed_s,
+                "packed_vs_unpacked_speedup": fused_s / packed_s,
+                "unpacked_history_bytes_per_step": DEPTH * (rows_m * kk + rows_m * cc) * 4,
+                "packed_history_bytes_per_step": (rows_m * kk + rows_m * cc) * 1,
             }
         )
 
@@ -125,7 +157,10 @@ def run(out_dir: str = "experiments/bench", verbose: bool = True, quick: bool = 
                 f"K={r['patch_width']:4d} C={r['out_channels']:3d}: "
                 f"ref {r['reference_sops_per_s']:.3e} SOP/s  "
                 f"fused {r['fused_sops_per_s']:.3e} SOP/s  "
-                f"x{r['fused_speedup']:.2f}"
+                f"x{r['fused_speedup']:.2f}  "
+                f"packed {r['packed_sops_per_s']:.3e} SOP/s "
+                f"({r['unpacked_history_bytes_per_step']} → "
+                f"{r['packed_history_bytes_per_step']} hist B/step)"
             )
         print(f"  → {bench_name} (conv section, {len(rows)} grid cells)")
     return out

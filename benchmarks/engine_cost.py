@@ -22,11 +22,13 @@ import os
 import time
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.bench_io import update_bench_json
 from repro.core.engine import (EngineConfig, init_engine,
                                init_engine_population, run_engine,
                                run_engine_population)
+from repro.kernels.dispatch import default_fused_backend, resolve_backend
 
 # ---------------------------------------------------------------------------
 # 1. Op/bit-count model (per synaptic weight update, nearest-neighbour)
@@ -130,12 +132,77 @@ def measure_backend_throughput(n: int, replicas: int, t_steps: int,
 def fused_backend_name() -> str:
     """The fused backend this host can actually run.
 
-    CPU can only run the Pallas kernel through the interpreter
-    (``fused_interpret``); on an accelerator the real compiled kernel
-    (``fused``) is measured.  The chosen name is recorded in the artifact
-    so interpreter numbers are never mistaken for kernel numbers.
+    Delegates to ``repro.kernels.dispatch.default_fused_backend`` (CPU can
+    only run the Pallas kernels through the interpreter; on an accelerator
+    the real compiled kernel is measured).  The chosen name is recorded in
+    the artifact so interpreter numbers are never mistaken for kernel
+    numbers.
     """
-    return "fused_interpret" if jax.default_backend() == "cpu" else "fused"
+    return default_fused_backend()
+
+
+# ---------------------------------------------------------------------------
+# 3. Packed vs unpacked history datapath (HBM bytes + throughput)
+# ---------------------------------------------------------------------------
+
+def measure_packed_history(n: int, depth: int = 7, t_steps: int = 50,
+                           seed: int = 0) -> dict:
+    """Packed uint8 words vs unpacked float32 bitplanes into the fused kernel.
+
+    Times a jitted ``t_steps`` scan of the fused weight update fed by (a)
+    depth-major ``(depth, n)`` float32 bitplane registers and (b) one packed
+    uint8 word per neuron, and records the per-step history bytes each
+    variant moves into the kernel — the ~``4·depth``× traffic reduction the
+    paper's 8-bit register file realises (ROADMAP bandwidth item).
+    """
+    from repro.core.history import pack_bitplanes
+    from repro.core.stdp import STDPParams
+    from repro.kernels.itp_stdp.ops import (weight_update_depth_major,
+                                            weight_update_packed)
+
+    _, interpret = resolve_backend(fused_backend_name())
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    pre_bits = jax.random.bernoulli(ks[0], 0.3, (t_steps, depth, n))
+    post_bits = jax.random.bernoulli(ks[1], 0.3, (t_steps, depth, n))
+    pre_s = jax.random.bernoulli(ks[2], 0.35, (t_steps, n))
+    post_s = jax.random.bernoulli(ks[3], 0.35, (t_steps, n))
+    # (t, n) uint8 words via the canonical packer (depth axis first)
+    pre_words = jax.vmap(pack_bitplanes)(pre_bits)
+    post_words = jax.vmap(pack_bitplanes)(post_bits)
+    params = STDPParams()
+    eta = 1.0 / 16.0
+
+    def scan_unpacked(w):
+        def step(w, xs):
+            p, q, pb, qb = xs
+            return weight_update_depth_major(
+                w, p, q, pb, qb, params, eta=eta, interpret=interpret), None
+        out, _ = jax.lax.scan(step, w, (pre_s, post_s, pre_bits, post_bits))
+        return out
+
+    def scan_packed(w):
+        def step(w, xs):
+            p, q, pw, qw = xs
+            return weight_update_packed(
+                w, p, q, pw, qw, params, depth=depth, eta=eta,
+                interpret=interpret), None
+        out, _ = jax.lax.scan(step, w, (pre_s, post_s, pre_words, post_words))
+        return out
+
+    w0 = jnp.full((n, n), 0.5, jnp.float32)
+    t_unpacked = _time_fn(jax.jit(scan_unpacked), w0)
+    t_packed = _time_fn(jax.jit(scan_packed), w0)
+    sops = n * n * t_steps
+    return {
+        "n": n, "depth": depth, "t_steps": t_steps,
+        # per-step history operand bytes entering the kernel (pre + post)
+        "unpacked_history_bytes_per_step": 2 * depth * n * 4,
+        "packed_history_bytes_per_step": 2 * n * 1,
+        "history_bytes_reduction": float(4 * depth),
+        "unpacked_sops_per_s": sops / t_unpacked,
+        "packed_sops_per_s": sops / t_packed,
+        "packed_speedup": t_unpacked / t_packed,
+    }
 
 
 def measure_backend_grid(sizes=(128, 256, 512), batches=(1, 8),
@@ -161,8 +228,11 @@ def run(out_dir: str = "experiments/bench", verbose: bool = True,
         quick: bool = False) -> dict:
     throughput = [measure_throughput(n) for n in sizes]
     backend_grid = measure_backend_grid(grid_sizes, grid_batches, grid_steps)
+    packed_grid = [measure_packed_history(n, t_steps=grid_steps)
+                   for n in grid_sizes]
     out = {"op_model": OP_MODEL, "throughput": throughput,
            "backend_grid": backend_grid,
+           "packed_grid": packed_grid,
            "paper_claims": {
                "fpga_energy_eff_gain": "4.5x-219.8x",
                "asic_speedup": "4.8x-22.01x",
@@ -183,7 +253,16 @@ def run(out_dir: str = "experiments/bench", verbose: bool = True,
                        "unit": "SOP/s",
                        "quick": quick,
                        "fused_backend": fused_backend_name(),
-                       "grid": backend_grid})
+                       "grid": backend_grid,
+                       # packed uint8 words vs unpacked f32 bitplanes into
+                       # the fused kernel: HBM history bytes + throughput
+                       "packed": {
+                           "benchmark": "packed_history_datapath",
+                           "unit": "SOP/s",
+                           "quick": quick,
+                           "fused_backend": fused_backend_name(),
+                           "grid": packed_grid,
+                       }})
     if verbose:
         print("— engine cost model (paper Tables III-V analogue) —")
         hdr = f"  {'variant':24s} {'exp':>4s} {'mul':>4s} {'amul':>5s} " \
@@ -206,6 +285,14 @@ def run(out_dir: str = "experiments/bench", verbose: bool = True,
                   f"ref {row['reference_sops_per_s']:.3e} SOP/s  "
                   f"fused {row['fused_sops_per_s']:.3e} SOP/s  "
                   f"×{row['fused_speedup']:.2f}")
+        print("  packed history datapath (uint8 words vs f32 bitplanes):")
+        for row in packed_grid:
+            print(f"    n={row['n']:5d} d={row['depth']}: "
+                  f"{row['unpacked_history_bytes_per_step']:7d} B/step → "
+                  f"{row['packed_history_bytes_per_step']:5d} B/step "
+                  f"(÷{row['history_bytes_reduction']:.0f})  "
+                  f"packed {row['packed_sops_per_s']:.3e} SOP/s  "
+                  f"×{row['packed_speedup']:.2f}")
         print(f"  → {bench_name} ({len(backend_grid)} grid cells)")
     return out
 

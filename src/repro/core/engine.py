@@ -48,6 +48,14 @@ class EngineConfig:
     quantise: bool = False               # round weights to the 8-bit grid
     rule: str = "itp"                    # plasticity.rule_names()
     backend: str = "reference"           # reference | fused | fused_interpret
+    packed_history: bool = True          # fused* datapaths read packed uint8
+                                         # register words (the paper's 8-bit
+                                         # register file); False keeps the
+                                         # unpacked bitplane kernel operands
+                                         # (the oracle datapath).  depth > 8
+                                         # exceeds the word width and falls
+                                         # back to the unpacked operands
+                                         # (see use_packed_history())
     stdp: STDPParams = dataclasses.field(default_factory=STDPParams)
     lif: LIFParams = dataclasses.field(default_factory=LIFParams)
 
@@ -66,6 +74,17 @@ class EngineConfig:
         """The rule's compensation override, or this config's flag."""
         rc = self.learning_rule().compensate
         return self.compensate if rc is None else rc
+
+    def use_packed_history(self) -> bool:
+        """Whether the fused datapaths read packed uint8 register words.
+
+        The packed word is the paper's 8-bit register file, so it only
+        holds ``depth <= 8``; deeper histories (valid on the unpacked
+        bitplane kernel) silently keep the unpacked operands rather than
+        failing mid-trace — the two datapaths are bit-identical, packing
+        is purely a bandwidth optimisation.
+        """
+        return self.packed_history and self.depth <= 8
 
 
 class EngineState(NamedTuple):
@@ -121,9 +140,23 @@ def engine_step(state: EngineState, pre_spikes: jax.Array,
     rule = cfg.learning_rule()
     use_kernel, interpret = plasticity.resolve_rule_backend(rule, cfg.backend)
     compensate = cfg.effective_compensate()
-    if use_kernel:
+    if use_kernel and cfg.use_packed_history():
+        # packed storage format (default): the kernel reads one uint8
+        # register word per neuron — the paper's 8-bit register file —
+        # and unpacks the bitplanes in-register; 4·depth× less history
+        # traffic than the float32 bitplane operands.  Bit-identical to
+        # the unpacked kernel path (tests/test_backend.py).
         # deferred import: repro.core must stay importable from the kernel
         # packages' own modules (ops.py imports repro.core.history)
+        from repro.kernels.itp_stdp.ops import weight_update_packed
+        w = weight_update_packed(
+            state.w, pre_spikes, post_spikes,
+            rule.readout_packed(state.pre_hist),
+            rule.readout_packed(state.post_hist),
+            cfg.stdp, depth=cfg.depth, pairing=cfg.pairing,
+            compensate=compensate, eta=cfg.eta, w_min=cfg.w_min,
+            w_max=cfg.w_max, interpret=interpret)
+    elif use_kernel:
         from repro.kernels.itp_stdp.ops import weight_update_depth_major
         w = weight_update_depth_major(
             state.w, pre_spikes, post_spikes,

@@ -27,7 +27,8 @@ from repro import plasticity
 from repro.core.engine import EngineConfig, EngineState, _quantise
 from repro.core.lif import LIFState, lif_step
 from repro.core.stdp import pair_gate
-from repro.kernels.itp_stdp.ops import weight_update_depth_major
+from repro.kernels.itp_stdp.ops import (weight_update_depth_major,
+                                        weight_update_packed)
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs):
@@ -69,6 +70,12 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
     rule = cfg.learning_rule()
     use_kernel, interpret = plasticity.resolve_rule_backend(rule, cfg.backend)
     compensate = cfg.effective_compensate()
+    # fused datapaths default to the packed storage format: the readout
+    # crossing shard_map is one uint8 word per neuron ((n,), sharded along
+    # axis 0) instead of (depth, n) float32 — 4·depth× less replicated
+    # history traffic per step (depth > 8 exceeds the word width and keeps
+    # the unpacked operands, see EngineConfig.use_packed_history)
+    packed = use_kernel and cfg.use_packed_history()
 
     def local_step(w, pre_spikes, pre_read, post_read, v):
         # w: local (pre_tile, post_tile); spikes and per-neuron readout
@@ -79,7 +86,13 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
         i_local = pre_spikes.astype(jnp.float32) @ w       # (post_tile,)
         i_in = jax.lax.psum(i_local, pre_ax)               # the ONE collective
         neurons, post_spikes = lif_step(LIFState(v=v), i_in, cfg.lif)
-        if use_kernel:
+        if packed:
+            w = weight_update_packed(
+                w, pre_spikes, post_spikes, pre_read, post_read, cfg.stdp,
+                depth=cfg.depth, pairing=cfg.pairing, compensate=compensate,
+                eta=cfg.eta, w_min=cfg.w_min, w_max=cfg.w_max,
+                interpret=interpret)
+        elif use_kernel:
             # fused Pallas datapath per local tile — the intrinsic-timing
             # update needs nothing beyond the device's own (pre, post) shard
             w = weight_update_depth_major(
@@ -101,23 +114,31 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
             w = _quantise(w, cfg)
         return w, post_spikes, neurons.v
 
+    # packed readouts are (n,) words sharded along axis 0; unpacked
+    # readouts are (rows, n) with the neuron axis second
+    pre_read_spec = P(pre_ax) if packed else P(None, pre_ax)
+    post_read_spec = P(post_ax) if packed else P(None, post_ax)
     sharded = _shard_map(
         local_step, mesh=mesh,
         in_specs=(P(pre_ax, post_ax),      # w tile
                   P(pre_ax),               # pre spikes (sharded like rows)
-                  P(None, pre_ax),         # pre readout (rows, n_pre)
-                  P(None, post_ax),        # post readout
+                  pre_read_spec,           # pre history readout
+                  post_read_spec,          # post history readout
                   P(post_ax)),             # membrane (sharded like cols)
         out_specs=(P(pre_ax, post_ax), P(post_ax), P(post_ax)))
 
     @jax.jit
     def step(state: EngineState, pre_spikes: jax.Array):
-        pre_read = rule.readout(state.pre_hist)
-        post_read = rule.readout(state.post_hist)
+        if packed:
+            pre_read = rule.readout_packed(state.pre_hist)
+            post_read = rule.readout_packed(state.post_hist)
+        else:
+            pre_read = rule.readout(state.pre_hist).astype(jnp.float32)
+            post_read = rule.readout(state.post_hist).astype(jnp.float32)
         w, post_spikes, v = sharded(state.w,
                                     pre_spikes.astype(jnp.float32),
-                                    pre_read.astype(jnp.float32),
-                                    post_read.astype(jnp.float32),
+                                    pre_read,
+                                    post_read,
                                     state.neurons.v)
         post_bool = post_spikes.astype(jnp.bool_)
         new_state = EngineState(

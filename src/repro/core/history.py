@@ -78,19 +78,43 @@ def registers_depth_major(h: SpikeHistory) -> jax.Array:
     return jnp.roll(rev, h.head + 1, axis=0)
 
 
+def latest(h: SpikeHistory) -> jax.Array:
+    """The most recent spike bit per neuron: ``(N,)`` uint8.
+
+    ``planes[head]`` directly — the k=0 column of :func:`as_register`
+    without materialising the (N, depth) gather+transpose (hot path of the
+    lateral-inhibition read, see ``repro.plasticity.rules``).
+    """
+    return h.planes[h.head]
+
+
+def pack_bitplanes(bits: jax.Array) -> jax.Array:
+    """Pack depth-major ``(depth, ...)`` {0,1} bitplanes into uint8 words.
+
+    The single owner of the MSB-first word layout (register slot k → word
+    bit ``7 - k``): :func:`pack_words`, the benchmarks, and the tests all
+    derive words through here, so the format lives in exactly one place.
+    """
+    depth = bits.shape[0]
+    if depth > 8:
+        raise ValueError("pack_bitplanes supports depth <= 8")
+    shifts = jnp.arange(7, 7 - depth, -1, dtype=jnp.uint8)  # MSB-first
+    shifts = shifts.reshape((depth,) + (1,) * (bits.ndim - 1))
+    return jnp.sum(bits.astype(jnp.uint8) << shifts, axis=0, dtype=jnp.uint8)
+
+
 def pack_words(h: SpikeHistory) -> jax.Array:
     """Pack each neuron's register into a uint8 word, MSB = most recent.
 
     This is byte-for-byte the register file of the hardware design (depth≤8;
     one spare low bit when depth==7, matching the paper's 8-bit datapath
-    with a sign bit reserved in the weight word, not here).
+    with a sign bit reserved in the weight word, not here).  Built from the
+    depth-major register view so the hot packed readout never materialises
+    the (N, depth) relayout.
     """
     if h.depth > 8:
         raise ValueError("pack_words supports depth <= 8")
-    reg = as_register(h)                     # (N, depth) {0,1}
-    shifts = jnp.arange(7, 7 - h.depth, -1)  # MSB-first placement
-    return jnp.sum(reg.astype(jnp.uint8) << shifts.astype(jnp.uint8), axis=-1,
-                   dtype=jnp.uint8)
+    return pack_bitplanes(registers_depth_major(h))
 
 
 def unpack_words(words: jax.Array, depth: int) -> jax.Array:
@@ -102,11 +126,17 @@ def unpack_words(words: jax.Array, depth: int) -> jax.Array:
 
 
 def fixed_point_value(words: jax.Array, depth: int) -> jax.Array:
-    """Read a packed history word as the paper's binary fraction.
+    """Read a packed history word as the paper's binary fraction (eq. 2).
 
-    With one integer bit (the MSB, weight 2^0) the word value is
-    Σ_k h[k]·2^(-k) — exactly the all-to-all accumulation of eq. (2) for the
-    uncompensated po2 kernel with τ=1/ln2· … i.e. the raw place-value read.
+    With one integer bit (the MSB, weight 2^0 = 128/128) the word value is
+    Σ_k h[k]·2^(-k) — the all-to-all accumulation of eq. (2) for the raw
+    (uncompensated, τ'=1) po2 read, i.e. ``a2a_delta_from_history`` with
+    amplitude 1.  The /128 scale is **depth-independent**: :func:`pack_words`
+    places k=0 at the MSB for every depth ≤ 8, so for depth < 8 the unused
+    low bits are zero and contribute nothing — a depth-7 word reads the same
+    Σ_{k<7} h[k]·2^(-k) as a depth-8 word with an empty oldest slot.  This
+    is the place-value oracle the packed Pallas kernels are tested against
+    (tests/test_history.py, tests/test_kernels.py).
     """
     del depth  # the place-value read is depth-independent once packed
     return words.astype(jnp.float32) / 128.0  # MSB has place value 2^0 = 128/128

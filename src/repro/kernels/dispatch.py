@@ -32,6 +32,25 @@ def resolve_backend(backend: str) -> tuple[bool, bool]:
     return backend != "reference", backend == "fused_interpret"
 
 
+def default_fused_backend() -> str:
+    """The fused backend this host can actually run.
+
+    CPU can only run the Pallas kernels through the interpreter
+    (``fused_interpret``); on an accelerator the compiled kernel
+    (``fused``) is the only sane default — a caller selecting the fused
+    path must never silently get interpreter mode on real hardware.
+    """
+    return "fused_interpret" if jax.default_backend() == "cpu" else "fused"
+
+
+def default_interpret() -> bool:
+    """Default ``interpret`` flag for ops wrappers when the caller does not
+    thread one: resolved from :func:`default_fused_backend`, so
+    ``backend="fused"`` semantics (compiled) apply on every accelerator and
+    interpreter mode is chosen only where nothing else can run (CPU)."""
+    return resolve_backend(default_fused_backend())[1]
+
+
 def round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 

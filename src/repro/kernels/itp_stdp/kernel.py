@@ -32,13 +32,28 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _stdp_kernel(pre_spike_ref, post_spike_ref, pre_hist_ref, post_hist_ref,
-                 po2_ltp_ref, po2_ltd_ref, w_ref, out_ref, *,
-                 nearest: bool, eta: float, w_min: float, w_max: float):
-    # (depth, TP) / (depth, TQ) bitplanes, {0,1}
-    pre_bits = pre_hist_ref[...].astype(jnp.float32)
-    post_bits = post_hist_ref[...].astype(jnp.float32)
+def _unpack_bits(words: jax.Array, depth: int) -> jax.Array:
+    """In-register bitplane unpack: (1, T) uint8 words → (depth, T) f32.
 
+    The shift+mask per depth slot of the paper's 8-bit register read (eq. 2
+    / Fig. 3): bit k of the logical register sits at word bit ``7 - k``
+    (MSB = most recent, ``repro.core.history.pack_words``).  Stays entirely
+    in VREGs — the only HBM traffic is the one byte per neuron.
+    """
+    w = words.astype(jnp.int32)
+    planes = [(w >> (7 - k)) & 1 for k in range(depth)]
+    return jnp.concatenate(planes, axis=0).astype(jnp.float32)
+
+
+def _stdp_body(pre_bits, post_bits, pre_spike_ref, post_spike_ref,
+               po2_ltp_ref, po2_ltd_ref, w_ref, out_ref, *,
+               nearest: bool, eta: float, w_min: float, w_max: float):
+    """Shared fused datapath: po2 read → XOR pair gate → clipped RMW.
+
+    Both kernel variants (bitplane-fed and packed-word-fed) route through
+    this body, so the packed path is bit-identical to the unpacked one by
+    construction.
+    """
     if nearest:
         # Fig. 11 MSB mask: keep only the first '1' scanning most-recent-first
         pre_bits = pre_bits * (jnp.cumsum(pre_bits, axis=0) == 1.0)
@@ -61,6 +76,30 @@ def _stdp_kernel(pre_spike_ref, post_spike_ref, pre_hist_ref, post_hist_ref,
     out_ref[...] = jnp.clip(w_ref[...] + eta * dw, w_min, w_max)
 
 
+def _stdp_kernel(pre_spike_ref, post_spike_ref, pre_hist_ref, post_hist_ref,
+                 po2_ltp_ref, po2_ltd_ref, w_ref, out_ref, *,
+                 nearest: bool, eta: float, w_min: float, w_max: float):
+    # (depth, TP) / (depth, TQ) bitplanes, {0,1}
+    pre_bits = pre_hist_ref[...].astype(jnp.float32)
+    post_bits = post_hist_ref[...].astype(jnp.float32)
+    _stdp_body(pre_bits, post_bits, pre_spike_ref, post_spike_ref,
+               po2_ltp_ref, po2_ltd_ref, w_ref, out_ref,
+               nearest=nearest, eta=eta, w_min=w_min, w_max=w_max)
+
+
+def _stdp_packed_kernel(pre_spike_ref, post_spike_ref, pre_word_ref,
+                        post_word_ref, po2_ltp_ref, po2_ltd_ref, w_ref,
+                        out_ref, *, depth: int, nearest: bool, eta: float,
+                        w_min: float, w_max: float):
+    # (1, TP) / (1, TQ) packed uint8 history words — one byte per neuron
+    # crosses HBM; the bitplanes exist only in-register
+    pre_bits = _unpack_bits(pre_word_ref[...], depth)     # (depth, TP)
+    post_bits = _unpack_bits(post_word_ref[...], depth)   # (depth, TQ)
+    _stdp_body(pre_bits, post_bits, pre_spike_ref, post_spike_ref,
+               po2_ltp_ref, po2_ltd_ref, w_ref, out_ref,
+               nearest=nearest, eta=eta, w_min=w_min, w_max=w_max)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("nearest", "eta", "w_min", "w_max", "tile_pre",
@@ -77,7 +116,7 @@ def itp_stdp_update(w: jax.Array,
                     w_max: float = 1.0,
                     tile_pre: int = 256,
                     tile_post: int = 256,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = False) -> jax.Array:
     """Fused ITP-STDP weight update.
 
     Args:
@@ -90,7 +129,7 @@ def itp_stdp_update(w: jax.Array,
       po2_ltd:    (depth,) LTD read vector  A-·2^(-k/τ').
       nearest:    nearest-neighbour (True) or all-to-all (False) pairing.
       interpret:  run the kernel body in interpret mode (CPU validation);
-                  False targets real TPU hardware.
+                  the default False targets real accelerator hardware.
 
     Returns the updated, clipped weight matrix.
     """
@@ -124,6 +163,88 @@ def itp_stdp_update(w: jax.Array,
         post_spike.reshape(1, n_post).astype(jnp.float32),
         pre_hist.astype(jnp.float32),
         post_hist.astype(jnp.float32),
+        po2_ltp.reshape(1, depth).astype(jnp.float32),
+        po2_ltd.reshape(1, depth).astype(jnp.float32),
+        w.astype(jnp.float32),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "nearest", "eta", "w_min", "w_max", "tile_pre",
+                     "tile_post", "interpret"),
+)
+def itp_stdp_update_packed(w: jax.Array,
+                           pre_spike: jax.Array, post_spike: jax.Array,
+                           pre_words: jax.Array, post_words: jax.Array,
+                           po2_ltp: jax.Array, po2_ltd: jax.Array,
+                           *,
+                           depth: int,
+                           nearest: bool = True,
+                           eta: float = 1.0,
+                           w_min: float = 0.0,
+                           w_max: float = 1.0,
+                           tile_pre: int = 256,
+                           tile_post: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """Fused ITP-STDP update fed by packed uint8 history words.
+
+    The storage-format variant of :func:`itp_stdp_update`: instead of
+    ``(depth, N)`` float32 bitplanes (``4·depth`` bytes of HBM traffic per
+    neuron) the kernel reads **one uint8 word per neuron** — the hardware
+    register file of the paper (Figs. 3/11) — and unpacks the bitplanes
+    in-register (shift+mask per depth slot) before the identical po2 dot
+    and XOR pair-gate.  Bit-identical to the unpacked kernel by
+    construction (shared ``_stdp_body``).
+
+    Args:
+      w:          (n_pre, n_post) float32 synapse matrix.
+      pre_spike:  (n_pre,)  current-step spikes {0,1}.
+      post_spike: (n_post,) current-step spikes {0,1}.
+      pre_words:  (n_pre,)  uint8 packed registers, MSB = most recent
+                  (``repro.core.history.pack_words``).
+      post_words: (n_post,) uint8 packed registers.
+      po2_ltp:    (depth,) LTP read vector  A+·2^(-k/τ').
+      po2_ltd:    (depth,) LTD read vector  A-·2^(-k/τ').
+      depth:      logical register depth (≤ 8).
+      nearest:    nearest-neighbour (True) or all-to-all (False) pairing.
+      interpret:  run the kernel body in interpret mode (CPU validation);
+                  the default False targets real accelerator hardware.
+
+    Returns the updated, clipped weight matrix.
+    """
+    if depth > 8:
+        raise ValueError("packed history words support depth <= 8")
+    n_pre, n_post = w.shape
+    tp = min(tile_pre, n_pre)
+    tq = min(tile_post, n_post)
+    if n_pre % tp or n_post % tq:
+        raise ValueError(f"tile sizes ({tp},{tq}) must divide ({n_pre},{n_post})")
+
+    grid = (n_pre // tp, n_post // tq)
+    kern = functools.partial(_stdp_packed_kernel, depth=depth,
+                             nearest=nearest, eta=eta, w_min=w_min,
+                             w_max=w_max)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tp), lambda i, j: (0, i)),        # pre_spike
+            pl.BlockSpec((1, tq), lambda i, j: (0, j)),        # post_spike
+            pl.BlockSpec((1, tp), lambda i, j: (0, i)),        # pre_words
+            pl.BlockSpec((1, tq), lambda i, j: (0, j)),        # post_words
+            pl.BlockSpec((1, depth), lambda i, j: (0, 0)),     # po2_ltp
+            pl.BlockSpec((1, depth), lambda i, j: (0, 0)),     # po2_ltd
+            pl.BlockSpec((tp, tq), lambda i, j: (i, j)),       # w
+        ],
+        out_specs=pl.BlockSpec((tp, tq), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pre, n_post), jnp.float32),
+        interpret=interpret,
+    )(
+        pre_spike.reshape(1, n_pre).astype(jnp.float32),
+        post_spike.reshape(1, n_post).astype(jnp.float32),
+        pre_words.reshape(1, n_pre).astype(jnp.uint8),
+        post_words.reshape(1, n_post).astype(jnp.uint8),
         po2_ltp.reshape(1, depth).astype(jnp.float32),
         po2_ltd.reshape(1, depth).astype(jnp.float32),
         w.astype(jnp.float32),

@@ -1,14 +1,22 @@
 """Public jit'd wrappers for the fused ITP-STDP kernel.
 
 Bridges ``repro.core`` state (SpikeHistory ring buffers, STDPParams) to the
-raw Pallas kernel, padding neuron counts to lane multiples.  Three entry
-points, from lowest to highest level:
+raw Pallas kernels, padding neuron counts to lane multiples.  Two datapath
+variants share one set of entry points:
 
-  * :func:`weight_update_depth_major` — fused update from depth-major
-    ``(depth, N)`` bitplane registers (the engine/sharded hot-path layout);
-  * :func:`engine_weight_update`      — same, from ``SpikeHistory`` state;
-  * :func:`synapse_delta`             — Δw only (no clip, no ``w`` read),
-    for batched callers that accumulate over replicas before applying.
+  * **packed** (the storage format the fused datapath runs on): one uint8
+    history word per neuron (``repro.core.history.pack_words``, the
+    hardware register file), unpacked to bitplanes in-register inside the
+    kernel — ``weight_update_packed`` / ``synapse_delta_packed``;
+  * **unpacked bitplane** (the oracle the packed path is pinned against):
+    depth-major ``(depth, N)`` float32 registers —
+    ``weight_update_depth_major`` / ``engine_weight_update`` /
+    ``synapse_delta``.
+
+``interpret`` defaults to ``None`` = "derive from the host via
+``repro.kernels.dispatch.default_interpret``": compiled on accelerators,
+interpreter only where nothing else runs (CPU) — selecting the fused
+kernel can never silently mean interpreter mode on real hardware.
 
 ``BACKENDS`` / :func:`resolve_backend` (the canonical datapath selections
 shared by ``EngineConfig.backend`` / ``SNNConfig.backend``) live in
@@ -19,18 +27,24 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.history import SpikeHistory, registers_depth_major
+from repro.core.history import SpikeHistory, pack_words, registers_depth_major
 from repro.core.stdp import STDPParams, po2_weights
 from repro.kernels.dispatch import BACKENDS, LANE, resolve_backend  # noqa: F401 (re-export)
+from repro.kernels.dispatch import default_interpret
 from repro.kernels.dispatch import pad_axis as _pad_to
 from repro.kernels.dispatch import round_up as _round_up
-from repro.kernels.itp_stdp.kernel import itp_stdp_update
+from repro.kernels.itp_stdp.kernel import (itp_stdp_update,
+                                           itp_stdp_update_packed)
 from repro.kernels.itp_stdp.ref import itp_stdp_update_ref
 
 
 def _tile(padded: int) -> int:
     """Largest of (256, LANE) that divides the padded (LANE-multiple) dim."""
     return 256 if padded % 256 == 0 else LANE
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else interpret
 
 
 def weight_update_depth_major(w: jax.Array,
@@ -44,7 +58,7 @@ def weight_update_depth_major(w: jax.Array,
                               w_min: float = 0.0,
                               w_max: float = 1.0,
                               use_kernel: bool = True,
-                              interpret: bool = True) -> jax.Array:
+                              interpret: bool | None = None) -> jax.Array:
     """Fused ITP-STDP update from depth-major ``(depth, N)`` registers.
 
     ``pre_bits``/``post_bits`` are the logical registers with the k=0 row
@@ -77,7 +91,59 @@ def weight_update_depth_major(w: jax.Array,
         po2_ltp, po2_ltd,
         nearest=nearest, eta=eta, w_min=w_min, w_max=w_max,
         tile_pre=_tile(p_pre), tile_post=_tile(p_post),
-        interpret=interpret,
+        interpret=_resolve_interpret(interpret),
+    )
+    return out[:n_pre, :n_post]
+
+
+def weight_update_packed(w: jax.Array,
+                         pre_spike: jax.Array, post_spike: jax.Array,
+                         pre_words: jax.Array, post_words: jax.Array,
+                         params: STDPParams,
+                         *,
+                         depth: int,
+                         pairing: str = "nearest",
+                         compensate: bool = True,
+                         eta: float = 1.0,
+                         w_min: float = 0.0,
+                         w_max: float = 1.0,
+                         use_kernel: bool = True,
+                         interpret: bool | None = None) -> jax.Array:
+    """Fused ITP-STDP update from packed uint8 history words.
+
+    ``pre_words``/``post_words`` are one ``uint8`` register word per neuron
+    (``repro.core.history.pack_words``, MSB = most recent) — the paper's
+    8-bit register file read in place.  Zero padding is exact: a zero word
+    carries no history bits, so padded neurons contribute nothing.
+    Bit-identical to :func:`weight_update_depth_major` on the kernel path
+    (shared fused body) and pinned against it by tests/test_kernels.py.
+    """
+    n_pre, n_post = w.shape
+    po2_ltp = params.a_plus * po2_weights(depth, params.tau_plus,
+                                          compensate=compensate)
+    po2_ltd = params.a_minus * po2_weights(depth, params.tau_minus,
+                                           compensate=compensate)
+    nearest = pairing == "nearest"
+    if not use_kernel:
+        from repro.core.history import unpack_words
+        return itp_stdp_update_ref(
+            w, pre_spike, post_spike,
+            unpack_words(pre_words, depth).T, unpack_words(post_words, depth).T,
+            po2_ltp, po2_ltd, nearest=nearest, eta=eta,
+            w_min=w_min, w_max=w_max)
+
+    p_pre = _round_up(n_pre, LANE)
+    p_post = _round_up(n_post, LANE)
+    out = itp_stdp_update_packed(
+        _pad_to(_pad_to(w, p_pre, 0), p_post, 1),
+        _pad_to(pre_spike.astype(jnp.float32), p_pre, 0),
+        _pad_to(post_spike.astype(jnp.float32), p_post, 0),
+        _pad_to(pre_words.astype(jnp.uint8), p_pre, 0),
+        _pad_to(post_words.astype(jnp.uint8), p_post, 0),
+        po2_ltp, po2_ltd,
+        depth=depth, nearest=nearest, eta=eta, w_min=w_min, w_max=w_max,
+        tile_pre=_tile(p_pre), tile_post=_tile(p_post),
+        interpret=_resolve_interpret(interpret),
     )
     return out[:n_pre, :n_post]
 
@@ -93,12 +159,22 @@ def engine_weight_update(w: jax.Array,
                          w_min: float = 0.0,
                          w_max: float = 1.0,
                          use_kernel: bool = True,
-                         interpret: bool = True) -> jax.Array:
+                         packed: bool = True,
+                         interpret: bool | None = None) -> jax.Array:
     """ITP-STDP update of the full synapse matrix via the Pallas kernel.
 
     Drop-in accelerated replacement for ``repro.core.stdp.synapse_update``
-    (same semantics, validated by tests/test_kernels.py).
+    (same semantics, validated by tests/test_kernels.py).  ``packed=True``
+    (the default) feeds the kernel one uint8 word per neuron; ``False``
+    keeps the unpacked bitplane operands (the oracle datapath).
     """
+    if packed and use_kernel:
+        return weight_update_packed(
+            w, pre_spike, post_spike,
+            pack_words(pre_hist), pack_words(post_hist), params,
+            depth=pre_hist.depth, pairing=pairing, compensate=compensate,
+            eta=eta, w_min=w_min, w_max=w_max, use_kernel=use_kernel,
+            interpret=interpret)
     return weight_update_depth_major(
         w, pre_spike, post_spike,
         registers_depth_major(pre_hist), registers_depth_major(post_hist),
@@ -113,7 +189,7 @@ def synapse_delta(pre_spike: jax.Array, post_spike: jax.Array,
                   pairing: str = "nearest",
                   compensate: bool = True,
                   use_kernel: bool = True,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool | None = None) -> jax.Array:
     """Raw Δw (pre × post) from depth-major registers — no clip, no ``w``.
 
     Batched callers (the SNN fc layers, population training) vmap this over
@@ -128,5 +204,30 @@ def synapse_delta(pre_spike: jax.Array, post_spike: jax.Array,
     return weight_update_depth_major(
         zero_w, pre_spike, post_spike, pre_bits, post_bits, params,
         pairing=pairing, compensate=compensate, eta=1.0,
+        w_min=float("-inf"), w_max=float("inf"),
+        use_kernel=use_kernel, interpret=interpret)
+
+
+def synapse_delta_packed(pre_spike: jax.Array, post_spike: jax.Array,
+                         pre_words: jax.Array, post_words: jax.Array,
+                         params: STDPParams,
+                         *,
+                         depth: int,
+                         pairing: str = "nearest",
+                         compensate: bool = True,
+                         use_kernel: bool = True,
+                         interpret: bool | None = None) -> jax.Array:
+    """Raw Δw (pre × post) from packed uint8 history words.
+
+    The packed twin of :func:`synapse_delta`: same zero-weight /
+    unbounded-clip trick, but the history operands are one byte per neuron
+    instead of ``4·depth`` — the SNN fc layers' fused batch path.
+    """
+    n_pre = pre_words.shape[-1]
+    n_post = post_words.shape[-1]
+    zero_w = jnp.zeros((n_pre, n_post), jnp.float32)
+    return weight_update_packed(
+        zero_w, pre_spike, post_spike, pre_words, post_words, params,
+        depth=depth, pairing=pairing, compensate=compensate, eta=1.0,
         w_min=float("-inf"), w_max=float("inf"),
         use_kernel=use_kernel, interpret=interpret)

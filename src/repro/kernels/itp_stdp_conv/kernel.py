@@ -33,22 +33,28 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _conv_stdp_kernel(
-    pre_ref,
-    post_ref,
-    pre_bits_ref,
-    post_bits_ref,
-    po2_ltp_ref,
-    po2_ltd_ref,
-    out_ref,
-    *,
-    nearest: bool,
-):
-    pre = pre_ref[...].astype(jnp.float32)  # (TM, K)
-    post = post_ref[...].astype(jnp.float32)  # (TM, C)
-    pre_bits = pre_bits_ref[...].astype(jnp.float32)  # (depth, TM, K)
-    post_bits = post_bits_ref[...].astype(jnp.float32)  # (depth, TM, C)
+def _unpack_bits(words: jax.Array, depth: int) -> jax.Array:
+    """In-register bitplane unpack: (TM, X) uint8 words → (depth, TM, X) f32.
 
+    Shift+mask per depth slot (paper eq. 2 / Fig. 3): bit k of the logical
+    register sits at word bit ``7 - k`` (MSB = most recent,
+    ``repro.core.history.pack_words``).  The bitplanes never touch HBM —
+    only the one byte per patch element does.
+    """
+    w = words.astype(jnp.int32)
+    planes = [((w >> (7 - k)) & 1)[None] for k in range(depth)]
+    return jnp.concatenate(planes, axis=0).astype(jnp.float32)
+
+
+def _conv_stdp_body(
+    pre, post, pre_bits, post_bits, po2_ltp_ref, po2_ltd_ref, out_ref, *, nearest: bool
+):
+    """Shared fused conv datapath: po2 read → pair gate → two MXU matmuls.
+
+    Both kernel variants (bitplane-fed and packed-word-fed) route through
+    this body, so the packed path is bit-identical to the unpacked one by
+    construction.
+    """
     if nearest:
         # Fig. 11 MSB mask: keep only the first '1' scanning most-recent-first
         pre_bits = pre_bits * (jnp.cumsum(pre_bits, axis=0) == 1.0)
@@ -77,6 +83,49 @@ def _conv_stdp_kernel(
     out_ref[...] += dw_ltp - dw_ltd
 
 
+def _conv_stdp_kernel(
+    pre_ref,
+    post_ref,
+    pre_bits_ref,
+    post_bits_ref,
+    po2_ltp_ref,
+    po2_ltd_ref,
+    out_ref,
+    *,
+    nearest: bool,
+):
+    pre = pre_ref[...].astype(jnp.float32)  # (TM, K)
+    post = post_ref[...].astype(jnp.float32)  # (TM, C)
+    pre_bits = pre_bits_ref[...].astype(jnp.float32)  # (depth, TM, K)
+    post_bits = post_bits_ref[...].astype(jnp.float32)  # (depth, TM, C)
+    _conv_stdp_body(
+        pre, post, pre_bits, post_bits, po2_ltp_ref, po2_ltd_ref, out_ref, nearest=nearest
+    )
+
+
+def _conv_stdp_packed_kernel(
+    pre_ref,
+    post_ref,
+    pre_word_ref,
+    post_word_ref,
+    po2_ltp_ref,
+    po2_ltd_ref,
+    out_ref,
+    *,
+    depth: int,
+    nearest: bool,
+):
+    pre = pre_ref[...].astype(jnp.float32)  # (TM, K)
+    post = post_ref[...].astype(jnp.float32)  # (TM, C)
+    # (TM, K) / (TM, C) packed uint8 words — one byte per patch element
+    # crosses HBM; the (depth, TM, ·) bitplanes exist only in-register
+    pre_bits = _unpack_bits(pre_word_ref[...], depth)
+    post_bits = _unpack_bits(post_word_ref[...], depth)
+    _conv_stdp_body(
+        pre, post, pre_bits, post_bits, po2_ltp_ref, po2_ltd_ref, out_ref, nearest=nearest
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("nearest", "tile_m", "interpret"),
@@ -91,7 +140,7 @@ def itp_stdp_conv_delta(
     *,
     nearest: bool = True,
     tile_m: int = 128,
-    interpret: bool = True,
+    interpret: bool = False,
 ) -> jax.Array:
     """Patch-level fused ITP-STDP conv weight delta.
 
@@ -105,7 +154,7 @@ def itp_stdp_conv_delta(
       nearest:     nearest-neighbour (True) or all-to-all (False) pairing.
       tile_m:      patch rows per grid step; must divide M.
       interpret:   run through the Pallas interpreter (CPU validation);
-                   False targets real TPU hardware.
+                   the default False targets real accelerator hardware.
 
     Returns the (K, C) float32 delta accumulated over all M patch rows.
     """
@@ -136,6 +185,82 @@ def itp_stdp_conv_delta(
         post_spikes.astype(jnp.float32),
         pre_bits.astype(jnp.float32),
         post_bits.astype(jnp.float32),
+        po2_ltp.reshape(1, depth).astype(jnp.float32),
+        po2_ltd.reshape(1, depth).astype(jnp.float32),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "nearest", "tile_m", "interpret"),
+)
+def itp_stdp_conv_delta_packed(
+    pre_patches: jax.Array,
+    post_spikes: jax.Array,
+    pre_words: jax.Array,
+    post_words: jax.Array,
+    po2_ltp: jax.Array,
+    po2_ltd: jax.Array,
+    *,
+    depth: int,
+    nearest: bool = True,
+    tile_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Patch-level fused conv delta fed by packed uint8 history words.
+
+    The storage-format variant of :func:`itp_stdp_conv_delta`: the history
+    operands are one uint8 register word per patch element / output neuron
+    (``repro.core.history.pack_words``, MSB = most recent) instead of
+    ``(depth, M, ·)`` float32 bitplanes — a ``4·depth``× reduction of the
+    dominant HBM stream.  Bitplanes are unpacked in-register (shift+mask
+    per depth slot) before the identical po2 read, pair gate, and patch-row
+    matmuls (shared ``_conv_stdp_body`` → bit-identical by construction).
+
+    Args:
+      pre_patches: (M, K) im2col spike patches, M = batch x output positions.
+      post_spikes: (M, C) current-step output spikes.
+      pre_words:   (M, K) uint8 packed history words in the same im2col
+                   patch layout as ``pre_patches``.
+      post_words:  (M, C) uint8 packed output-history words.
+      po2_ltp:     (depth,) LTP read vector (A+ amplitude folded in).
+      po2_ltd:     (depth,) LTD read vector (A- amplitude folded in).
+      depth:       logical register depth (≤ 8).
+      nearest:     nearest-neighbour (True) or all-to-all (False) pairing.
+      tile_m:      patch rows per grid step; must divide M.
+      interpret:   run through the Pallas interpreter (CPU validation);
+                   the default False targets real accelerator hardware.
+
+    Returns the (K, C) float32 delta accumulated over all M patch rows.
+    """
+    if depth > 8:
+        raise ValueError("packed history words support depth <= 8")
+    m, kk = pre_patches.shape
+    cc = post_spikes.shape[1]
+    tm = min(tile_m, m)
+    if m % tm:
+        raise ValueError(f"tile_m={tm} must divide M={m}")
+
+    kern = functools.partial(_conv_stdp_packed_kernel, depth=depth, nearest=nearest)
+    return pl.pallas_call(
+        kern,
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, kk), lambda i: (i, 0)),  # pre patches
+            pl.BlockSpec((tm, cc), lambda i: (i, 0)),  # post spikes
+            pl.BlockSpec((tm, kk), lambda i: (i, 0)),  # pre packed words
+            pl.BlockSpec((tm, cc), lambda i: (i, 0)),  # post packed words
+            pl.BlockSpec((1, depth), lambda i: (0, 0)),  # po2 LTP read vector
+            pl.BlockSpec((1, depth), lambda i: (0, 0)),  # po2 LTD read vector
+        ],
+        out_specs=pl.BlockSpec((kk, cc), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kk, cc), jnp.float32),
+        interpret=interpret,
+    )(
+        pre_patches.astype(jnp.float32),
+        post_spikes.astype(jnp.float32),
+        pre_words.astype(jnp.uint8),
+        post_words.astype(jnp.uint8),
         po2_ltp.reshape(1, depth).astype(jnp.float32),
         po2_ltd.reshape(1, depth).astype(jnp.float32),
     )

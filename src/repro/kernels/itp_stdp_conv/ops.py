@@ -1,27 +1,40 @@
 """Public wrappers for the fused im2col ITP-STDP conv kernel.
 
-Bridges model-level state (im2col spike patches + depth-major bitplane
-registers, STDPParams) to the raw Pallas kernel, padding the small patch
-and channel axes to lane multiples and the patch-row axis to a tile
-multiple.  Zero padding is exact here: padded rows and columns carry no
-spikes and no history bits, so every gated term they contribute is zero.
+Bridges model-level state (im2col spike patches + history registers,
+STDPParams) to the raw Pallas kernels, padding the small patch and channel
+axes to lane multiples and the patch-row axis to a tile multiple.  Zero
+padding is exact here: padded rows and columns carry no spikes and no
+history bits, so every gated term they contribute is zero.
 
-:func:`conv_synapse_delta` mirrors ``repro.kernels.itp_stdp.ops.
-synapse_delta`` — it returns the raw (K, C) delta so callers own the
-batch normalisation, clip, and quantisation.  :func:`im2col_2d` /
-:func:`im2col_1d` are the shared patch extractors the SNN conv layers use
-for both the spike and the bitplane inputs.
+Two history datapaths share the entry-point shape:
+
+  * :func:`conv_synapse_delta_packed` — **packed** uint8 register words,
+    one byte per patch element, im2col'd **once** via the dtype-preserving
+    :func:`im2col_words_2d` / :func:`im2col_words_1d` gather instead of
+    materialising ``(depth, M, K)`` float32 bitplane patches in HBM;
+  * :func:`conv_synapse_delta` — unpacked depth-major bitplane patches
+    (the oracle the packed path is pinned against).
+
+Both mirror ``repro.kernels.itp_stdp.ops.synapse_delta`` — they return the
+raw (K, C) delta so callers own the batch normalisation, clip, and
+quantisation.  :func:`im2col_2d` / :func:`im2col_1d` are the shared float
+patch extractors the SNN conv layers use for the spike inputs.
+``interpret=None`` derives the interpreter flag from the host
+(``repro.kernels.dispatch.default_interpret``) so the fused path is never
+silently interpreted on real accelerators.
 """
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
+from repro.core.history import unpack_words
 from repro.core.stdp import STDPParams, po2_weights
-from repro.kernels.dispatch import LANE, SUBLANE
+from repro.kernels.dispatch import LANE, SUBLANE, default_interpret
 from repro.kernels.dispatch import pad_axis as _pad_axis
 from repro.kernels.dispatch import round_up as _round_up
-from repro.kernels.itp_stdp_conv.kernel import itp_stdp_conv_delta
+from repro.kernels.itp_stdp_conv.kernel import itp_stdp_conv_delta, itp_stdp_conv_delta_packed
 from repro.kernels.itp_stdp_conv.ref import itp_stdp_conv_delta_ref
 
 
@@ -48,6 +61,40 @@ def im2col_1d(x: jax.Array, k: int, stride: int) -> jax.Array:
     return p.reshape(B, Lo, k * C)
 
 
+def im2col_words_2d(x: jax.Array, k: int, stride: int) -> jax.Array:
+    """(B, H, W, C) -> (B, Ho, Wo, k*k*C) dtype-preserving im2col gather.
+
+    Patch extraction for the packed uint8 history words: a pure gather
+    (im2col is a copy), so the words cross memory once at one byte per
+    patch element — no float cast, no per-depth replication.  Feature
+    ordering matches :func:`im2col_2d` exactly ((kh, kw, c) row-major).
+    """
+    B, H, W, C = x.shape
+    ho = (H - k) // stride + 1
+    wo = (W - k) // stride + 1
+    oh = (jnp.arange(ho) * stride)[:, None, None, None, None]
+    ow = (jnp.arange(wo) * stride)[None, :, None, None, None]
+    kh = jnp.arange(k)[None, None, :, None, None]
+    kw = jnp.arange(k)[None, None, None, :, None]
+    idx = ((oh + kh) * W + (ow + kw)) * C + jnp.arange(C)[None, None, None, None, :]
+    out = x.reshape(B, H * W * C)[:, idx.reshape(-1)]
+    return out.reshape(B, ho, wo, k * k * C)
+
+
+def im2col_words_1d(x: jax.Array, k: int, stride: int) -> jax.Array:
+    """(B, L, C) -> (B, Lo, k*C) dtype-preserving im2col gather.
+
+    1-D twin of :func:`im2col_words_2d`; feature ordering matches
+    :func:`im2col_1d` exactly ((kk, c) row-major).
+    """
+    B, L, C = x.shape
+    lo = (L - k) // stride + 1
+    pos = (jnp.arange(lo) * stride)[:, None, None] + jnp.arange(k)[None, :, None]
+    idx = pos * C + jnp.arange(C)[None, None, :]
+    out = x.reshape(B, L * C)[:, idx.reshape(-1)]
+    return out.reshape(B, lo, k * C)
+
+
 def conv_synapse_delta(
     pre_patches: jax.Array,
     post_spikes: jax.Array,
@@ -58,7 +105,7 @@ def conv_synapse_delta(
     pairing: str = "nearest",
     compensate: bool = True,
     use_kernel: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
     tile_m: int = 128,
 ) -> jax.Array:
     """Raw (K, C) conv-layer delta from im2col patches + bitplane registers.
@@ -101,6 +148,66 @@ def conv_synapse_delta(
         po2_ltd,
         nearest=nearest,
         tile_m=tm,
-        interpret=interpret,
+        interpret=default_interpret() if interpret is None else interpret,
+    )
+    return out[:kk, :cc]
+
+
+def conv_synapse_delta_packed(
+    pre_patches: jax.Array,
+    post_spikes: jax.Array,
+    pre_words: jax.Array,
+    post_words: jax.Array,
+    params: STDPParams,
+    *,
+    depth: int,
+    pairing: str = "nearest",
+    compensate: bool = True,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    tile_m: int = 128,
+) -> jax.Array:
+    """Raw (K, C) conv-layer delta from packed uint8 history words.
+
+    The packed twin of :func:`conv_synapse_delta`: ``pre_words`` (M, K) /
+    ``post_words`` (M, C) carry one uint8 register word per patch element
+    (``repro.core.history.pack_words``, MSB = most recent) gathered into
+    the im2col layout by :func:`im2col_words_2d` / :func:`im2col_words_1d`
+    — ``4·depth``× less history traffic than the ``(depth, M, ·)`` float32
+    bitplane patches.  Zero padding is exact (a zero word carries no
+    history bits).  Bit-identical to the unpacked kernel path (shared
+    fused body) and pinned against it by tests/test_conv_backend.py.
+    """
+    m, kk = pre_patches.shape
+    cc = post_spikes.shape[1]
+    po2_ltp = params.a_plus * po2_weights(depth, params.tau_plus, compensate=compensate)
+    po2_ltd = params.a_minus * po2_weights(depth, params.tau_minus, compensate=compensate)
+    nearest = pairing == "nearest"
+    if not use_kernel:
+        return itp_stdp_conv_delta_ref(
+            pre_patches,
+            post_spikes,
+            jnp.transpose(unpack_words(pre_words, depth), (2, 0, 1)),
+            jnp.transpose(unpack_words(post_words, depth), (2, 0, 1)),
+            po2_ltp,
+            po2_ltd,
+            nearest=nearest,
+        )
+
+    tm = min(tile_m, _round_up(m, SUBLANE))
+    pm = _round_up(m, tm)
+    pk = _round_up(kk, LANE)
+    pc = _round_up(cc, LANE)
+    out = itp_stdp_conv_delta_packed(
+        _pad_axis(_pad_axis(pre_patches, pm, 0), pk, 1),
+        _pad_axis(_pad_axis(post_spikes, pm, 0), pc, 1),
+        _pad_axis(_pad_axis(pre_words.astype(jnp.uint8), pm, 0), pk, 1),
+        _pad_axis(_pad_axis(post_words.astype(jnp.uint8), pm, 0), pc, 1),
+        po2_ltp,
+        po2_ltd,
+        depth=depth,
+        nearest=nearest,
+        tile_m=tm,
+        interpret=default_interpret() if interpret is None else interpret,
     )
     return out[:kk, :cc]

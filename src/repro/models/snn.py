@@ -37,13 +37,16 @@ import jax
 import jax.numpy as jnp
 
 from repro import plasticity
-from repro.core.history import registers_depth_major
+from repro.core.history import pack_words, registers_depth_major
 from repro.core.lif import (IzhikevichParams, LIFParams, izhikevich_init,
                             izhikevich_step, lif_init, lif_step)
 from repro.core.stdp import STDPParams
-from repro.kernels.itp_stdp.ops import resolve_backend, synapse_delta
-from repro.kernels.itp_stdp_conv.ops import (conv_synapse_delta, im2col_1d,
-                                             im2col_2d)
+from repro.kernels.itp_stdp.ops import (resolve_backend, synapse_delta,
+                                        synapse_delta_packed)
+from repro.kernels.itp_stdp_conv.ops import (conv_synapse_delta,
+                                             conv_synapse_delta_packed,
+                                             im2col_1d, im2col_2d,
+                                             im2col_words_1d, im2col_words_2d)
 
 
 # ---------------------------------------------------------------------------
@@ -74,6 +77,10 @@ class SNNConfig:
     w_bits: int = 8
     quantise: bool = True
     backend: str = "reference"    # reference | fused | fused_interpret
+    packed_history: bool = True   # fused* datapaths read packed uint8
+                                  # register words (one byte per neuron /
+                                  # patch element); False keeps the unpacked
+                                  # bitplane kernel operands (the oracle)
     inhibition: float = 0.0       # lateral inhibition strength (2-layer SNN)
     stdp: STDPParams = dataclasses.field(default_factory=STDPParams)
     lif: LIFParams = dataclasses.field(
@@ -98,6 +105,12 @@ class SNNConfig:
         # 'itp_nocomp' pins the raw po2 read via its rule override.
         rc = self.learning_rule().compensate
         return True if rc is None else rc
+
+    def use_packed_history(self) -> bool:
+        """Packed uint8 words hold depth <= 8 only; deeper histories keep
+        the unpacked bitplane kernel operands (bit-identical, so packing
+        is purely a bandwidth optimisation — never a trace-time failure)."""
+        return self.packed_history and self.depth <= 8
 
 
 # The paper's three networks -------------------------------------------------
@@ -290,7 +303,22 @@ def _fused_fc_delta(cfg: SNNConfig, st: "LayerState", s_in: jax.Array,
     pre = s_in.reshape(B, -1)                       # (B, fan_in)
     post = s_out.reshape(B, -1)                     # (B, n_out)
     _, interpret = resolve_backend(cfg.backend)
-    # histories are stored flat over (B · n); view per-sample depth-major
+    if cfg.use_packed_history():
+        # packed storage format (default): one uint8 register word per
+        # neuron crosses into the kernel instead of (depth, n) float32
+        # bitplanes; histories are stored flat over (B · n)
+        pre_words = pack_words(st.pre_hist).reshape(B, -1)    # (B, fan_in)
+        post_words = pack_words(st.post_hist).reshape(B, -1)  # (B, n_out)
+
+        def one_packed(p, q, pw, qw):
+            return synapse_delta_packed(
+                p, q, pw, qw, cfg.stdp, depth=cfg.depth,
+                pairing=cfg.pairing, compensate=cfg.compensate,
+                interpret=interpret)
+
+        return jax.vmap(one_packed)(pre, post, pre_words,
+                                    post_words).sum(axis=0)
+    # unpacked oracle datapath: per-sample depth-major bitplane views
     pre_bits = registers_depth_major(st.pre_hist).reshape(
         cfg.depth, B, -1).transpose(1, 0, 2)        # (B, depth, fan_in)
     post_bits = registers_depth_major(st.post_hist).reshape(
@@ -320,6 +348,21 @@ def _conv_delta(cfg: SNNConfig, spec: SNNLayerSpec, st: "LayerState",
     """
     use_kernel, interpret = resolve_backend(cfg.backend)
     B = s_out.shape[0]
+    if use_kernel and cfg.use_packed_history():
+        # packed storage format (default on the kernel path): im2col the
+        # (M, K) uint8 register words once — one byte per patch element —
+        # instead of gathering (depth, M, K) float32 bitplane patches
+        im2col_w = im2col_words_2d if spec.kind == "conv2d" else im2col_words_1d
+        pre_words = pack_words(st.pre_hist).reshape((B,) + tuple(in_shape))
+        pre_words = im2col_w(pre_words, spec.kernel, spec.stride)
+        pre_words = pre_words.reshape(-1, pre_words.shape[-1])   # (M, K)
+        post_words = pack_words(st.post_hist).reshape(-1, s_out.shape[-1])
+        return conv_synapse_delta_packed(
+            patches.reshape(-1, patches.shape[-1]),  # (M, K)
+            s_out.reshape(-1, s_out.shape[-1]),      # (M, C)
+            pre_words, post_words, cfg.stdp, depth=cfg.depth,
+            pairing=cfg.pairing, compensate=cfg.compensate,
+            interpret=interpret)
     im2col = im2col_2d if spec.kind == "conv2d" else im2col_1d
     pre_bits = registers_depth_major(st.pre_hist).astype(jnp.float32)
     pre_bits = pre_bits.reshape((cfg.depth, B) + tuple(in_shape))

@@ -68,6 +68,17 @@ class LearningRule(abc.ABC):
         rules, one counter row for Δt rules); shards along axis 1.
         """
 
+    def readout_packed(self, state: Any) -> jax.Array:
+        """Packed ``(n,)`` uint8 view of the state — one register word per
+        neuron (``repro.core.history.pack_words``, MSB = most recent).
+
+        The storage format the fused Pallas kernels consume (depth ≤ 8);
+        shards along axis 0.  Only kernel-backed rules (``has_kernel``)
+        implement it — the fused datapaths are unreachable for the others
+        (:func:`resolve_rule_backend` rejects them at config time).
+        """
+        raise NotImplementedError(f"rule {self.name!r} has no packed (kernel) state layout")
+
     @abc.abstractmethod
     def magnitudes_from_readout(
         self,

@@ -56,6 +56,9 @@ class HistoryRule(LearningRule):
     def readout(self, state: H.SpikeHistory) -> jax.Array:
         return H.registers_depth_major(state)  # (depth, n), k=0 newest
 
+    def readout_packed(self, state: H.SpikeHistory) -> jax.Array:
+        return H.pack_words(state)  # (n,) uint8, MSB = newest
+
     def magnitudes_from_readout(
         self,
         arr: jax.Array,
@@ -73,7 +76,11 @@ class HistoryRule(LearningRule):
         return magnitudes_depth_major(arr, amplitude, tau, pairing=pairing, compensate=compensate)
 
     def last_spikes(self, state: H.SpikeHistory) -> jax.Array:
-        return H.as_register(state)[:, 0].astype(jnp.float32)
+        # the newest spike bit is planes[head] directly — reading it via
+        # as_register(state)[:, 0] would materialise the full (N, depth)
+        # gather+transpose every step just to drop depth-1 columns
+        # (equivalence pinned by tests/test_plasticity.py)
+        return H.latest(state).astype(jnp.float32)
 
 
 def _window_exact(dt: jax.Array, amplitude: float, tau: float, depth: int) -> jax.Array:

@@ -74,6 +74,55 @@ def test_population_replicas_are_independent(key):
     assert not np.allclose(flat[0], flat[1])
 
 
+def test_packed_engine_trajectory_bit_identical_to_unpacked(key):
+    """Multi-step engine scan: the packed uint8 word datapath (the default
+    fused storage format) is bit-identical to the unpacked bitplane kernel
+    datapath — array_equal over the full trajectory, both pairings."""
+    for pairing in ("nearest", "all"):
+        cfg_packed = EngineConfig(n_pre=48, n_post=40, eta=0.25,
+                                  pairing=pairing, backend="fused_interpret")
+        cfg_unpacked = dataclasses.replace(cfg_packed, packed_history=False)
+        assert cfg_packed.packed_history          # packed is the default
+        state = init_engine(key, cfg_packed)
+        train = jax.random.bernoulli(key, 0.35, (T_STEPS, 48))
+        s_p, post_p = run_engine(state, train, cfg_packed)
+        s_u, post_u = run_engine(state, train, cfg_unpacked)
+        np.testing.assert_array_equal(np.asarray(s_p.w), np.asarray(s_u.w))
+        np.testing.assert_array_equal(np.asarray(post_p), np.asarray(post_u))
+
+
+def test_packed_snn_fc_trajectory_bit_identical_to_unpacked(key):
+    """Network-level fc path: packed words ≡ unpacked bitplanes, bit for bit."""
+    cfg_packed = snn.mnist_2layer("itp", n_hidden=24,
+                                  backend="fused_interpret")
+    cfg_unpacked = dataclasses.replace(cfg_packed, packed_history=False)
+    batch, t = 4, 10
+    state = snn.init_snn(key, cfg_packed, batch)
+    raster = jax.random.bernoulli(key, 0.2, (t, batch, 28 * 28))
+    s_p, counts_p = snn.run_snn(state, raster, cfg_packed, train=True)
+    s_u, counts_u = snn.run_snn(state, raster, cfg_unpacked, train=True)
+    np.testing.assert_array_equal(np.asarray(s_p.weights[0]),
+                                  np.asarray(s_u.weights[0]))
+    np.testing.assert_array_equal(np.asarray(counts_p), np.asarray(counts_u))
+
+
+def test_depth_beyond_word_width_falls_back_to_unpacked(key):
+    """depth > 8 exceeds the packed uint8 word; the fused path must keep
+    running on the unpacked bitplane operands (previously-working configs
+    stay working) and still match the reference trajectory."""
+    cfg = EngineConfig(n_pre=24, n_post=16, depth=9, eta=0.25)
+    cfg_fused = dataclasses.replace(cfg, backend="fused_interpret")
+    assert cfg_fused.packed_history and not cfg_fused.use_packed_history()
+    state = init_engine(key, cfg)
+    train = jax.random.bernoulli(key, 0.35, (32, cfg.n_pre))
+    s_ref, post_ref = run_engine(state, train, cfg)
+    s_fused, post_fused = run_engine(state, train, cfg_fused)
+    np.testing.assert_allclose(np.asarray(s_fused.w), np.asarray(s_ref.w),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(post_fused),
+                                  np.asarray(post_ref))
+
+
 def test_unknown_backend_rejected():
     with pytest.raises(ValueError, match="unknown backend"):
         EngineConfig(backend="cuda")

@@ -1,0 +1,67 @@
+"""benchmarks/bench_io.update_bench_json: merge semantics + crash hygiene.
+
+The tracked BENCH_*.json trajectory files are shared by several benchmark
+modules; the writer must merge (never clobber siblings), write atomically,
+and — the regression here — never leave an *untracked stray matching a
+tracked pattern* in the repo root when a run is killed between the temp
+write and the rename.
+"""
+import fnmatch
+import json
+import os
+
+import pytest
+
+from benchmarks import bench_io
+from benchmarks.bench_io import update_bench_json
+
+
+@pytest.fixture
+def bench_root(tmp_path, monkeypatch):
+    monkeypatch.setattr(bench_io, "REPO_ROOT", str(tmp_path))
+    return tmp_path
+
+
+def test_merge_keeps_sibling_sections(bench_root):
+    update_bench_json("BENCH_x.json", {"engine": {"a": 1}})
+    update_bench_json("BENCH_x.json", {"conv": {"b": 2}})
+    data = json.loads((bench_root / "BENCH_x.json").read_text())
+    assert data == {"engine": {"a": 1}, "conv": {"b": 2}}
+
+
+def test_write_does_not_narrow_file_mode(bench_root):
+    """mkstemp scratch files are born 0600; the rename must not propagate
+    that onto the tracked artifact (readable checkout for other users)."""
+    path = bench_root / "BENCH_x.json"
+    update_bench_json("BENCH_x.json", {"a": 1})
+    umask = os.umask(0)
+    os.umask(umask)
+    assert (path.stat().st_mode & 0o777) == (0o666 & ~umask)
+    os.chmod(path, 0o644)
+    update_bench_json("BENCH_x.json", {"b": 2})
+    assert (path.stat().st_mode & 0o777) == 0o644  # pre-existing mode kept
+
+
+def test_interrupted_write_leaves_no_stray_file(bench_root):
+    """A run killed mid-write (simulated via an unserialisable payload, which
+    raises exactly between temp-file creation and os.replace) must leave the
+    repo root as it was: no BENCH_*.json.tmp, nothing a `git status` would
+    show as untracked under a tracked pattern."""
+    update_bench_json("BENCH_x.json", {"engine": {"a": 1}})
+    before = sorted(os.listdir(bench_root))
+    with pytest.raises(TypeError):
+        update_bench_json("BENCH_x.json", {"bad": object()})
+    assert sorted(os.listdir(bench_root)) == before
+    # the pre-existing trajectory is untouched (atomicity)
+    data = json.loads((bench_root / "BENCH_x.json").read_text())
+    assert data == {"engine": {"a": 1}}
+
+
+def test_scratch_name_is_gitignored_pattern():
+    """Even if cleanup itself is killed, the scratch name must fall under a
+    .gitignore pattern so it can never appear as an untracked stray."""
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    gitignore = open(os.path.join(repo_root, ".gitignore")).read().splitlines()
+    patterns = [p.strip() for p in gitignore if p.strip() and not p.startswith("#")]
+    sample = bench_io._TMP_PREFIX + "abc123" + bench_io._TMP_SUFFIX
+    assert any(fnmatch.fnmatch(sample, pat) for pat in patterns)

@@ -13,9 +13,11 @@ import jax
 import numpy as np
 import pytest
 
+from repro.core.history import pack_bitplanes
 from repro.core.stdp import STDPParams
 from repro.kernels.itp_stdp.ops import synapse_delta
-from repro.kernels.itp_stdp_conv.ops import conv_synapse_delta
+from repro.kernels.itp_stdp_conv.ops import (conv_synapse_delta,
+                                             conv_synapse_delta_packed)
 from repro.models import snn
 
 DEPTH = 7
@@ -28,6 +30,11 @@ def _random_layer(key, m, kk, cc):
     pre_bits = jax.random.bernoulli(ks[2], 0.3, (DEPTH, m, kk))
     post_bits = jax.random.bernoulli(ks[3], 0.25, (DEPTH, m, cc))
     return pre, post, pre_bits, post_bits
+
+
+def _pack(bits):
+    """(depth, M, X) {0,1} → (M, X) uint8 words via the canonical packer."""
+    return pack_bitplanes(bits)
 
 
 # unaligned M / K / C on purpose: the ops padding must be exact
@@ -43,6 +50,30 @@ def test_conv_kernel_matches_ref(key, m, kk, cc, pairing):
                                interpret=True)
     # atol 1e-4 on O(10) values: tiled f32 accumulation order differs
     np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               atol=1e-4, rtol=1e-5)
+
+
+# unaligned M / K / C on purpose: the packed ops padding must be exact too
+@pytest.mark.parametrize("m,kk,cc", [(24, 25, 12), (130, 14, 8)])
+@pytest.mark.parametrize("pairing", ["nearest", "all"])
+def test_packed_conv_kernel_bit_identical_to_unpacked(key, m, kk, cc, pairing):
+    """The packed-word conv kernel is bit-identical (array_equal) to the
+    bitplane conv kernel: same fused body, operands unpacked in-register."""
+    pre, post, pre_bits, post_bits = _random_layer(key, m, kk, cc)
+    params = STDPParams()
+    unpacked = conv_synapse_delta(pre, post, pre_bits, post_bits, params,
+                                  pairing=pairing, use_kernel=True,
+                                  interpret=True)
+    packed = conv_synapse_delta_packed(pre, post, _pack(pre_bits),
+                                       _pack(post_bits), params, depth=DEPTH,
+                                       pairing=pairing, use_kernel=True,
+                                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(unpacked))
+    # and the packed reference (unpack + jnp oracle) tracks within f32 tol
+    ref = conv_synapse_delta_packed(pre, post, _pack(pre_bits),
+                                    _pack(post_bits), params, depth=DEPTH,
+                                    pairing=pairing, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(packed), np.asarray(ref),
                                atol=1e-4, rtol=1e-5)
 
 
@@ -124,6 +155,28 @@ def test_paper_conv_net_backend_equivalence(key, maker):
                                    atol=1e-5, rtol=1e-5)
     np.testing.assert_array_equal(np.asarray(counts_fused),
                                   np.asarray(counts_ref))
+
+
+@pytest.mark.parametrize("maker", [
+    snn.fmnist_dcsnn,
+    lambda **kw: snn.fault_csnn(length=128, **kw),
+], ids=["6layer-dcsnn", "5layer-csnn"])
+def test_paper_conv_net_packed_bit_identical_to_unpacked(key, maker):
+    """DCSNN/CSNN multi-step trajectories: the packed uint8 history datapath
+    (the default fused storage format) is bit-identical to the unpacked
+    bitplane kernel datapath — weights and spike counts array_equal."""
+    cfg_packed = maker(rule="itp", backend="fused_interpret")
+    cfg_unpacked = dataclasses.replace(cfg_packed, packed_history=False)
+    assert cfg_packed.packed_history              # packed is the default
+    batch, t_steps = 2, 5
+    state = snn.init_snn(key, cfg_packed, batch)
+    n_in = int(np.prod(cfg_packed.input_shape))
+    raster = jax.random.bernoulli(key, 0.25, (t_steps, batch, n_in))
+    s_p, counts_p = snn.run_snn(state, raster, cfg_packed, train=True)
+    s_u, counts_u = snn.run_snn(state, raster, cfg_unpacked, train=True)
+    for wp, wu in zip(s_p.weights, s_u.weights):
+        np.testing.assert_array_equal(np.asarray(wp), np.asarray(wu))
+    np.testing.assert_array_equal(np.asarray(counts_p), np.asarray(counts_u))
 
 
 def test_conv_fused_config_constructs_clean():

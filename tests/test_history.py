@@ -1,10 +1,11 @@
 """Bitplane spike-history ring buffer vs the naive shift-register model."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.history import (as_register, fixed_point_value, init_history,
-                                pack_words, push, unpack_words)
+                                latest, pack_words, push, unpack_words)
 
 
 def _naive_shift(raster):
@@ -45,6 +46,60 @@ def test_pack_unpack_roundtrip(data, depth, n):
     reg = unpack_words(words, depth)
     np.testing.assert_array_equal(np.asarray(reg),
                                   np.asarray(bits, np.uint8))
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data(),
+       depth=st.integers(1, 8), n=st.integers(1, 6), steps=st.integers(0, 20))
+def test_pack_unpack_roundtrip_any_head(data, depth, n, steps):
+    """pack→unpack is the identity for every depth ∈ 1..8 and every
+    ring-buffer head position (``steps`` pushes leave head = (steps-1) %
+    depth), not just the aligned head the depth-length feed produces."""
+    raster = data.draw(
+        st.lists(st.lists(st.integers(0, 1), min_size=n, max_size=n),
+                 min_size=steps, max_size=steps))
+    h = init_history(n, depth)
+    for row in raster:
+        h = push(h, jnp.asarray(row, jnp.uint8))
+    reg = np.asarray(as_register(h))               # (n, depth), the oracle
+    words = pack_words(h)
+    np.testing.assert_array_equal(np.asarray(unpack_words(words, depth)), reg)
+    # MSB placement is depth-independent: bit 7-k of the word is register k
+    w = np.asarray(words)
+    for k in range(depth):
+        np.testing.assert_array_equal((w >> (7 - k)) & 1, reg[:, k])
+    # the spare low bits of a depth<8 word are always zero
+    if depth < 8:
+        assert (w & ((1 << (8 - depth)) - 1) == 0).all()
+    # latest() is the k=0 column read without the register relayout
+    np.testing.assert_array_equal(np.asarray(latest(h)), reg[:, 0])
+
+
+@pytest.mark.parametrize("depth", [7, 8])
+def test_fixed_point_value_is_the_po2_place_value_oracle(key, depth):
+    """The /128 scale reads Σ h[k]·2^(-k) for depth 7 AND 8: the word value
+    equals the raw (uncompensated, τ'=1) all-to-all po2 register read the
+    packed kernels are pinned against (the eq. 2 accumulation)."""
+    import jax
+    from repro.core.stdp import magnitudes_depth_major, po2_weights
+    n = 32
+    h = init_history(n, depth)
+    for t in range(depth + 3):                     # wrap the ring buffer
+        h = push(h, jax.random.bernoulli(jax.random.fold_in(key, t), 0.4,
+                                         (n,)).astype(jnp.uint8))
+    words = pack_words(h)
+    got = np.asarray(fixed_point_value(words, depth))
+    # oracle 1: explicit place values off the register view
+    reg = np.asarray(as_register(h), np.float32)
+    want = (reg * (2.0 ** -np.arange(depth))).sum(axis=1)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+    # oracle 2: the rule readout with the raw po2 vector (A=1, τ=1, no
+    # compensation ⇒ po2_weights = 2^-k exactly)
+    bits = np.asarray(as_register(h)).T            # (depth, n)
+    mags = magnitudes_depth_major(jnp.asarray(bits), 1.0, 1.0,
+                                  pairing="all", compensate=False)
+    np.testing.assert_allclose(got, np.asarray(mags), atol=1e-6)
+    assert float(po2_weights(depth, 1.0, compensate=False)[1]) == 0.5
 
 
 def test_fixed_point_value_matches_place_values():

@@ -75,6 +75,128 @@ def test_engine_weight_update_matches_core(key):
 
 
 # ---------------------------------------------------------------------------
+# Packed uint8 history datapath (the storage format the fused path runs on)
+# ---------------------------------------------------------------------------
+
+def _rolled_histories(key, n_pre, n_post, depth, steps=11):
+    pre_h = init_history(n_pre, depth)
+    post_h = init_history(n_post, depth)
+    for t in range(steps):
+        pre_h = push(pre_h, jax.random.bernoulli(
+            jax.random.fold_in(key, 10 + t), 0.3, (n_pre,)).astype(jnp.uint8))
+        post_h = push(post_h, jax.random.bernoulli(
+            jax.random.fold_in(key, 50 + t), 0.3, (n_post,)).astype(jnp.uint8))
+    return pre_h, post_h
+
+
+@pytest.mark.parametrize("pairing", ["nearest", "all"])
+@pytest.mark.parametrize("depth", [7, 8])
+def test_packed_kernel_bit_identical_to_unpacked(key, depth, pairing):
+    """The packed-word kernel is *bit-identical* (array_equal, not allclose)
+    to the bitplane kernel: the in-register shift+mask unpack reproduces the
+    exact operands, and both route through the same fused body."""
+    from repro.core.history import pack_words, registers_depth_major
+    from repro.kernels.itp_stdp.ops import (weight_update_depth_major,
+                                            weight_update_packed)
+    n_pre, n_post = 100, 50
+    pre_h, post_h = _rolled_histories(key, n_pre, n_post, depth)
+    p = STDPParams()
+    w = jax.random.uniform(key, (n_pre, n_post))
+    pre_s = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (n_pre,))
+    post_s = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.5, (n_post,))
+    unpacked = weight_update_depth_major(
+        w, pre_s, post_s, registers_depth_major(pre_h),
+        registers_depth_major(post_h), p, pairing=pairing, eta=0.5,
+        interpret=True)
+    packed = weight_update_packed(
+        w, pre_s, post_s, pack_words(pre_h), pack_words(post_h), p,
+        depth=depth, pairing=pairing, eta=0.5, interpret=True)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(unpacked))
+    # the packed reference (unpack + jnp oracle) agrees too
+    ref = weight_update_packed(
+        w, pre_s, post_s, pack_words(pre_h), pack_words(post_h), p,
+        depth=depth, pairing=pairing, eta=0.5, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(unpacked),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("depth", [7, 8])
+def test_packed_kernel_reads_fixed_point_place_values(key, depth):
+    """fixed_point_value is the packed kernel's place-value oracle: with the
+    raw po2 read (A=1, τ=1, uncompensated ⇒ read vector 2^-k), all-to-all
+    pairing, and only the post side firing, every synapse row i receives
+    exactly the binary-fraction value of neuron i's packed word (eq. 2)."""
+    from repro.core.history import fixed_point_value, pack_words
+    from repro.kernels.itp_stdp.kernel import itp_stdp_update_packed
+    from repro.core.stdp import po2_weights
+    n = 128
+    pre_h, post_h = _rolled_histories(key, n, n, depth)
+    words = pack_words(pre_h)
+    po2 = po2_weights(depth, 1.0, compensate=False)      # exactly 2^-k
+    out = itp_stdp_update_packed(
+        jnp.zeros((n, n), jnp.float32),
+        jnp.zeros((n,)), jnp.ones((n,)),                 # post fired alone
+        words, pack_words(post_h), po2, po2,
+        depth=depth, nearest=False, eta=1.0,
+        w_min=float("-inf"), w_max=float("inf"),
+        tile_pre=128, tile_post=128, interpret=True)
+    want = np.asarray(fixed_point_value(words, depth))   # (n,)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.broadcast_to(want[:, None], (n, n)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_engine_weight_update_packed_toggle_matches(key):
+    """engine_weight_update(packed=True) ≡ packed=False ≡ core oracle."""
+    from repro.core.history import as_register
+    from repro.kernels.itp_stdp.ops import engine_weight_update
+    n_pre, n_post, depth = 100, 50, 7
+    pre_h, post_h = _rolled_histories(key, n_pre, n_post, depth)
+    p = STDPParams()
+    w = jax.random.uniform(key, (n_pre, n_post))
+    pre_s = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (n_pre,))
+    post_s = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.5, (n_post,))
+    got_packed = engine_weight_update(w, pre_s, post_s, pre_h, post_h, p,
+                                      eta=0.5, packed=True, interpret=True)
+    got_unpacked = engine_weight_update(w, pre_s, post_s, pre_h, post_h, p,
+                                        eta=0.5, packed=False, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_packed),
+                                  np.asarray(got_unpacked))
+    want = synapse_update(w, pre_s, post_s, as_register(pre_h),
+                          as_register(post_h), p, eta=0.5)
+    np.testing.assert_allclose(np.asarray(got_packed), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_interpret_default_derives_from_host():
+    """The ops wrappers' interpret default comes from the dispatch layer:
+    on CPU it resolves to the interpreter (the only thing that runs), on an
+    accelerator it must resolve to the compiled kernel — selecting the
+    fused path can never silently mean interpreter mode on real hardware."""
+    from repro.kernels.dispatch import (default_fused_backend,
+                                        default_interpret, resolve_backend)
+    assert default_interpret() == resolve_backend(default_fused_backend())[1]
+    if jax.default_backend() == "cpu":
+        assert default_fused_backend() == "fused_interpret"
+        assert default_interpret() is True
+    else:  # pragma: no cover - accelerator hosts only
+        assert default_fused_backend() == "fused"
+        assert default_interpret() is False
+
+
+def test_ops_wrappers_run_with_derived_interpret_default(key):
+    """Omitting ``interpret`` is safe on this host (derived, not hardcoded)."""
+    from repro.core.history import pack_words
+    from repro.kernels.itp_stdp.ops import weight_update_packed
+    n = 16
+    pre_h, post_h = _rolled_histories(key, n, n, 7, steps=3)
+    out = weight_update_packed(
+        jnp.full((n, n), 0.5), jnp.ones((n,)), jnp.zeros((n,)),
+        pack_words(pre_h), pack_words(post_h), STDPParams(), depth=7)
+    assert out.shape == (n, n)
+
+
+# ---------------------------------------------------------------------------
 # LIF kernel
 # ---------------------------------------------------------------------------
 

@@ -80,6 +80,38 @@ def test_launcher_cli_rejects_bad_rule():
     assert "--rule" in r.stderr and "itp" in r.stderr
 
 
+def test_history_rule_last_spikes_reads_newest_bit_without_relayout(key):
+    """The hot-path newest-spike readout is planes[head] directly and must
+    equal the k=0 column of the full (N, depth) register materialisation —
+    for every ring-buffer head position, including pre-wrap and post-wrap."""
+    rule = plasticity.get_rule("itp")
+    n, depth = 13, 7
+    state = rule.init_state(n, depth)
+    np.testing.assert_array_equal(np.asarray(rule.last_spikes(state)),
+                                  np.zeros(n, np.float32))
+    for t in range(2 * depth + 3):                # wraps the ring twice
+        spikes = jax.random.bernoulli(jax.random.fold_in(key, t), 0.4, (n,))
+        state = rule.step(state, spikes, depth=depth)
+        want = np.asarray(H.as_register(state))[:, 0].astype(np.float32)
+        got = np.asarray(rule.last_spikes(state))
+        np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(got, np.asarray(spikes, np.float32))
+
+
+def test_history_rule_packed_readout_matches_pack_words(key):
+    """readout_packed is the registry view of pack_words; counter rules
+    reject it (no packed state layout → the fused datapaths stay closed)."""
+    rule = plasticity.get_rule("itp")
+    state = rule.init_state(9, 7)
+    for t in range(5):
+        state = rule.step(state, jax.random.bernoulli(
+            jax.random.fold_in(key, t), 0.5, (9,)), depth=7)
+    np.testing.assert_array_equal(np.asarray(rule.readout_packed(state)),
+                                  np.asarray(H.pack_words(state)))
+    with pytest.raises(NotImplementedError, match="packed"):
+        plasticity.get_rule("exact").readout_packed(jnp.zeros(4, jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # Trajectory pins
 # ---------------------------------------------------------------------------
