@@ -1,16 +1,25 @@
 """Benchmark orchestrator: ``PYTHONPATH=src python -m benchmarks.run``.
 
-One module per paper table/figure (DESIGN.md §7):
+One module per paper table/figure (DESIGN.md §7), registered in
+``MODULES`` — the single source the ``--only`` choices, the ``--list``
+output, and the dispatch loop all derive from, so the CLI surface cannot
+drift from what actually runs (CI smokes ``--list`` against the modules
+it exercises):
+
     drift             — Fig. 5 + §IV-A numbers (RMSE / equilibrium / conv.)
     isi               — Fig. 6 ISI histogram + depth-7 coverage
     network_accuracy  — Table II accuracy parity (3 nets × 3 rules)
     engine_cost       — Tables III-V op/bit model + measured SOP/s
-    rule_cost         — per-rule engine throughput (ITP vs exact & co.)
+    rule_cost         — per-rule engine throughput, reference + fused
+                        (ITP vs the fused counter kernels & co.)
     conv_cost         — im2col-fused conv update: reference vs Pallas grid
     roofline          — §Roofline terms from the dry-run artifacts
 
 ``--only <name>`` runs a single module; ``--quick`` shrinks the
-network-accuracy protocol for CI-speed runs.
+protocols for CI-speed runs; ``--list`` prints the registered module
+names (one per line) and exits.  ``summary.json`` is merged
+read-modify-write, so successive ``--only`` invocations accumulate their
+metrics instead of clobbering each other.
 """
 from __future__ import annotations
 
@@ -20,91 +29,118 @@ import os
 import time
 
 
+def _run_drift(args):
+    from benchmarks import drift
+    r = drift.run(args.out)
+    return {"rmse": r["metrics"]["update_curve_rmse"]}
+
+
+def _run_isi(args):
+    from benchmarks import isi
+    r = isi.run(args.out)
+    return {"coverage_at_7": r["pooled_coverage_at_7"]}
+
+
+def _run_network_accuracy(args):
+    from benchmarks import network_accuracy
+    kw = {"n_train": 48, "n_test": 32, "seeds": (0,)} if args.quick else {}
+    network_accuracy.run(args.out, **kw)
+    return {}
+
+
+def _run_engine_cost(args):
+    from benchmarks import engine_cost
+    if args.quick:
+        r = engine_cost.run(args.out, sizes=(64, 256),
+                            grid_sizes=(64, 128, 256), grid_batches=(1, 4),
+                            grid_steps=25, quick=True)
+    else:
+        r = engine_cost.run(args.out)
+    return {"speedups": [t["speedup"] for t in r["throughput"]],
+            "fused_speedups": [c["fused_speedup"] for c in r["backend_grid"]]}
+
+
+def _run_rule_cost(args):
+    from benchmarks import rule_cost
+    if args.quick:
+        r = rule_cost.run(args.out, sizes=(64, 128), t_steps=25, quick=True)
+    else:
+        r = rule_cost.run(args.out)
+    return {"itp_vs_exact": [c.get("itp_vs_exact_speedup")
+                             for c in r["grid"]],
+            "fused_itp_vs_exact": [c.get("fused_itp_vs_exact_speedup")
+                                   for c in r["grid"]]}
+
+
+def _run_conv_cost(args):
+    from benchmarks import conv_cost
+    r = conv_cost.run(args.out, quick=args.quick)
+    return {"fused_speedups": [c["fused_speedup"] for c in r["grid"]]}
+
+
+def _run_roofline(args):
+    from benchmarks import roofline
+    r = roofline.run(args.out)
+    return {"cells": len(r["rows"]), "missing": len(r["missing"])}
+
+
+# name → runner; insertion order is execution order.  --only choices,
+# --list, and the dispatch loop below all read THIS dict — add a module
+# here and every CLI surface picks it up.
+MODULES = {
+    "drift": _run_drift,
+    "isi": _run_isi,
+    "network_accuracy": _run_network_accuracy,
+    "engine_cost": _run_engine_cost,
+    "rule_cost": _run_rule_cost,
+    "conv_cost": _run_conv_cost,
+    "roofline": _run_roofline,
+}
+
+
+def _merge_summary(path: str, update: dict) -> dict:
+    """Read-modify-write summary.json so --only runs accumulate."""
+    summary = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                summary = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            summary = {}
+    summary.update(update)
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1)
+    return summary
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=("drift", "isi", "network_accuracy",
-                                       "engine_cost", "rule_cost",
-                                       "conv_cost", "roofline"))
+    ap.add_argument("--only", choices=tuple(MODULES))
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registered benchmark modules and exit")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args()
 
+    if args.list:
+        for name in MODULES:
+            print(name)
+        return
+
     os.makedirs(args.out, exist_ok=True)
-    summary = {}
+    results = {}
     t_start = time.time()
-
-    def want(name):
-        return args.only is None or args.only == name
-
-    if want("drift"):
-        from benchmarks import drift
+    for name, runner in MODULES.items():
+        if args.only is not None and args.only != name:
+            continue
         t0 = time.time()
-        r = drift.run(args.out)
-        summary["drift"] = {"seconds": round(time.time() - t0, 1),
-                            "rmse": r["metrics"]["update_curve_rmse"]}
-        print()
-    if want("isi"):
-        from benchmarks import isi
-        t0 = time.time()
-        r = isi.run(args.out)
-        summary["isi"] = {"seconds": round(time.time() - t0, 1),
-                          "coverage_at_7": r["pooled_coverage_at_7"]}
-        print()
-    if want("network_accuracy"):
-        from benchmarks import network_accuracy
-        t0 = time.time()
-        kw = {"n_train": 48, "n_test": 32, "seeds": (0,)} if args.quick else {}
-        network_accuracy.run(args.out, **kw)
-        summary["network_accuracy"] = {"seconds": round(time.time() - t0, 1)}
-        print()
-    if want("engine_cost"):
-        from benchmarks import engine_cost
-        t0 = time.time()
-        if args.quick:
-            r = engine_cost.run(args.out, sizes=(64, 256),
-                                grid_sizes=(64, 128, 256), grid_batches=(1, 4),
-                                grid_steps=25, quick=True)
-        else:
-            r = engine_cost.run(args.out)
-        summary["engine_cost"] = {
-            "seconds": round(time.time() - t0, 1),
-            "speedups": [t["speedup"] for t in r["throughput"]],
-            "fused_speedups": [c["fused_speedup"] for c in r["backend_grid"]]}
-        print()
-    if want("rule_cost"):
-        from benchmarks import rule_cost
-        t0 = time.time()
-        if args.quick:
-            r = rule_cost.run(args.out, sizes=(64, 128), t_steps=25,
-                              quick=True)
-        else:
-            r = rule_cost.run(args.out)
-        summary["rule_cost"] = {
-            "seconds": round(time.time() - t0, 1),
-            "itp_vs_exact": [c.get("itp_vs_exact_speedup")
-                             for c in r["grid"]]}
-        print()
-    if want("conv_cost"):
-        from benchmarks import conv_cost
-        t0 = time.time()
-        r = conv_cost.run(args.out, quick=args.quick)
-        summary["conv_cost"] = {
-            "seconds": round(time.time() - t0, 1),
-            "fused_speedups": [c["fused_speedup"] for c in r["grid"]]}
-        print()
-    if want("roofline"):
-        from benchmarks import roofline
-        t0 = time.time()
-        r = roofline.run(args.out)
-        summary["roofline"] = {"seconds": round(time.time() - t0, 1),
-                               "cells": len(r["rows"]),
-                               "missing": len(r["missing"])}
+        metrics = runner(args)
+        results[name] = {"seconds": round(time.time() - t0, 1), **metrics}
         print()
 
-    summary["total_seconds"] = round(time.time() - t_start, 1)
-    with open(os.path.join(args.out, "summary.json"), "w") as f:
-        json.dump(summary, f, indent=1)
-    print(f"benchmarks complete in {summary['total_seconds']}s "
+    results["total_seconds"] = round(time.time() - t_start, 1)
+    _merge_summary(os.path.join(args.out, "summary.json"), results)
+    print(f"benchmarks complete in {results['total_seconds']}s "
           f"→ {args.out}/")
 
 

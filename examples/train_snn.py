@@ -15,9 +15,10 @@ Run:  PYTHONPATH=src python examples/train_snn.py \
       (--steps 300 ≈ 300 simulation steps = 10 batches × 30-step rasters)
 
 ``--rule`` selects the learning rule from the ``repro.plasticity``
-registry — the paper's Table II comparison axis.  The counter rules
-(exact/linear/imstdp) are reference-backend only; combining one with a
-fused* backend fails up front with the valid combinations.
+registry — the paper's Table II comparison axis.  Every rule runs on
+every backend: the counter rules (exact/linear/imstdp) ride the fused
+explicit-Δt kernels of ``repro.kernels.itp_counter`` on the fused*
+backends, so the rule comparison is kernel-vs-kernel.
 """
 import argparse
 import time
@@ -46,9 +47,8 @@ def main():
                     help="which of the paper's three networks to train")
     ap.add_argument("--rule", default="itp",
                     choices=plasticity.rule_names(),
-                    help="learning rule (paper Table II axis); the counter "
-                         "rules exact/linear/imstdp need "
-                         "--backend reference")
+                    help="learning rule (paper Table II axis); every rule "
+                         "runs on every --backend")
     ap.add_argument("--backend", default="reference", choices=BACKENDS,
                     help="weight-update datapath: pure-jnp reference or the "
                          "fused Pallas kernels (interpret mode runs them on "

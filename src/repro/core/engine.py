@@ -140,30 +140,22 @@ def engine_step(state: EngineState, pre_spikes: jax.Array,
     rule = cfg.learning_rule()
     use_kernel, interpret = plasticity.resolve_rule_backend(rule, cfg.backend)
     compensate = cfg.effective_compensate()
-    if use_kernel and cfg.use_packed_history():
-        # packed storage format (default): the kernel reads one uint8
-        # register word per neuron — the paper's 8-bit register file —
-        # and unpacks the bitplanes in-register; 4·depth× less history
-        # traffic than the float32 bitplane operands.  Bit-identical to
-        # the unpacked kernel path (tests/test_backend.py).
-        # deferred import: repro.core must stay importable from the kernel
-        # packages' own modules (ops.py imports repro.core.history)
-        from repro.kernels.itp_stdp.ops import weight_update_packed
-        w = weight_update_packed(
+    if use_kernel:
+        # rule-owned fused datapath: history rules ride the itp_stdp
+        # kernel (packed uint8 register words by default — the paper's
+        # 8-bit register file, 4·depth× less history traffic than the
+        # float32 bitplanes; bit-identical either way, see
+        # tests/test_backend.py), counter rules the itp_counter kernel
+        # (per-pair Δt formed in-register from the uint8 counter word,
+        # window fused with the accumulate — tests/test_counter_backend.py)
+        packed = cfg.use_packed_history()
+        w = rule.fused_update_from_readout(
             state.w, pre_spikes, post_spikes,
-            rule.readout_packed(state.pre_hist),
-            rule.readout_packed(state.post_hist),
+            rule.kernel_readout(state.pre_hist, packed=packed),
+            rule.kernel_readout(state.post_hist, packed=packed),
             cfg.stdp, depth=cfg.depth, pairing=cfg.pairing,
             compensate=compensate, eta=cfg.eta, w_min=cfg.w_min,
             w_max=cfg.w_max, interpret=interpret)
-    elif use_kernel:
-        from repro.kernels.itp_stdp.ops import weight_update_depth_major
-        w = weight_update_depth_major(
-            state.w, pre_spikes, post_spikes,
-            rule.readout(state.pre_hist), rule.readout(state.post_hist),
-            cfg.stdp, pairing=cfg.pairing, compensate=compensate,
-            eta=cfg.eta, w_min=cfg.w_min, w_max=cfg.w_max,
-            interpret=interpret)
     else:
         dw = rule.delta(state.pre_hist, state.post_hist,
                         pre_spikes, post_spikes, cfg.stdp, depth=cfg.depth,

@@ -27,8 +27,6 @@ from repro import plasticity
 from repro.core.engine import EngineConfig, EngineState, _quantise
 from repro.core.lif import LIFState, lif_step
 from repro.core.stdp import pair_gate
-from repro.kernels.itp_stdp.ops import (weight_update_depth_major,
-                                        weight_update_packed)
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs):
@@ -70,12 +68,15 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
     rule = cfg.learning_rule()
     use_kernel, interpret = plasticity.resolve_rule_backend(rule, cfg.backend)
     compensate = cfg.effective_compensate()
-    # fused datapaths default to the packed storage format: the readout
-    # crossing shard_map is one uint8 word per neuron ((n,), sharded along
-    # axis 0) instead of (depth, n) float32 — 4·depth× less replicated
-    # history traffic per step (depth > 8 exceeds the word width and keeps
-    # the unpacked operands, see EngineConfig.use_packed_history)
-    packed = use_kernel and cfg.use_packed_history()
+    # fused datapaths default to the per-neuron word storage format: the
+    # readout crossing shard_map is one uint8 word per neuron ((n,),
+    # sharded along axis 0) — the packed register word for the history
+    # rules (4·depth× less replicated history traffic than (depth, n)
+    # float32; depth > 8 exceeds the word width and keeps the unpacked
+    # operands, see EngineConfig.use_packed_history) and the saturating
+    # last-spike counter for the counter rules (their only kernel layout).
+    packed = cfg.use_packed_history()
+    words = use_kernel and rule.kernel_readout_axes(packed=packed) == 1
 
     def local_step(w, pre_spikes, pre_read, post_read, v):
         # w: local (pre_tile, post_tile); spikes and per-neuron readout
@@ -86,19 +87,14 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
         i_local = pre_spikes.astype(jnp.float32) @ w       # (post_tile,)
         i_in = jax.lax.psum(i_local, pre_ax)               # the ONE collective
         neurons, post_spikes = lif_step(LIFState(v=v), i_in, cfg.lif)
-        if packed:
-            w = weight_update_packed(
+        if use_kernel:
+            # rule-owned fused Pallas datapath per local tile — both rule
+            # families' per-neuron readouts make the tile update local
+            w = rule.fused_update_from_readout(
                 w, pre_spikes, post_spikes, pre_read, post_read, cfg.stdp,
                 depth=cfg.depth, pairing=cfg.pairing, compensate=compensate,
                 eta=cfg.eta, w_min=cfg.w_min, w_max=cfg.w_max,
                 interpret=interpret)
-        elif use_kernel:
-            # fused Pallas datapath per local tile — the intrinsic-timing
-            # update needs nothing beyond the device's own (pre, post) shard
-            w = weight_update_depth_major(
-                w, pre_spikes, post_spikes, pre_read, post_read, cfg.stdp,
-                pairing=cfg.pairing, compensate=compensate, eta=cfg.eta,
-                w_min=cfg.w_min, w_max=cfg.w_max, interpret=interpret)
         else:
             ltp = rule.magnitudes_from_readout(
                 pre_read, cfg.stdp.a_plus, cfg.stdp.tau_plus,
@@ -114,10 +110,10 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
             w = _quantise(w, cfg)
         return w, post_spikes, neurons.v
 
-    # packed readouts are (n,) words sharded along axis 0; unpacked
-    # readouts are (rows, n) with the neuron axis second
-    pre_read_spec = P(pre_ax) if packed else P(None, pre_ax)
-    post_read_spec = P(post_ax) if packed else P(None, post_ax)
+    # word readouts are (n,) uint8 sharded along axis 0; row readouts are
+    # (rows, n) with the neuron axis second
+    pre_read_spec = P(pre_ax) if words else P(None, pre_ax)
+    post_read_spec = P(post_ax) if words else P(None, post_ax)
     sharded = _shard_map(
         local_step, mesh=mesh,
         in_specs=(P(pre_ax, post_ax),      # w tile
@@ -129,9 +125,9 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
 
     @jax.jit
     def step(state: EngineState, pre_spikes: jax.Array):
-        if packed:
-            pre_read = rule.readout_packed(state.pre_hist)
-            post_read = rule.readout_packed(state.post_hist)
+        if use_kernel:
+            pre_read = rule.kernel_readout(state.pre_hist, packed=packed)
+            post_read = rule.kernel_readout(state.post_hist, packed=packed)
         else:
             pre_read = rule.readout(state.pre_hist).astype(jnp.float32)
             post_read = rule.readout(state.post_hist).astype(jnp.float32)

@@ -1,0 +1,216 @@
+"""Public wrappers for the fused counter-rule (explicit-Δt STDP) kernels.
+
+Bridges rule-level state (per-neuron last-spike counter words, STDPParams)
+to the raw Pallas kernels, padding neuron / patch-row / lane axes with the
+shared helpers in ``repro.kernels.dispatch`` exactly like the ``itp_stdp``
+packages.  Zero padding is exact here because every contribution a padded
+element could make is spike-gated: padded rows and columns carry no spikes,
+and the out-of-range weight cells are sliced away — a zero counter word in
+the pad region (nominally "spiked last step") can never reach a surviving
+output cell.
+
+The storage format is the counter twin of the packed uint8 history words:
+**one uint8 word per neuron**, holding the saturating last-spike counter
+(``repro.plasticity.rules.CounterRule.readout_packed``).  It crosses
+shard_map and enters the kernel exactly like the packed history words of
+the intrinsic-timing rules — same (n,) uint8 shape, same axis-0 sharding.
+
+``interpret=None`` derives the interpreter flag from the host
+(``repro.kernels.dispatch.default_interpret``): compiled on accelerators,
+interpreter only where nothing else runs (CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stdp import STDPParams
+from repro.kernels.dispatch import LANE, SUBLANE, default_interpret
+from repro.kernels.dispatch import pad_axis as _pad_axis
+from repro.kernels.dispatch import round_up as _round_up
+from repro.kernels.itp_counter.kernel import counter_conv_delta, counter_stdp_update
+from repro.kernels.itp_counter.ref import counter_conv_delta_ref, counter_stdp_update_ref
+
+# one uint8 word per neuron: the saturating counter must fit the word
+MAX_COUNTER_DEPTH = 255
+
+
+def _tile(padded: int) -> int:
+    """Largest of (256, LANE) that divides the padded (LANE-multiple) dim."""
+    return 256 if padded % 256 == 0 else LANE
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else interpret
+
+
+def _check_depth(depth: int) -> None:
+    if depth > MAX_COUNTER_DEPTH:
+        raise ValueError(f"counter words are uint8: depth must be <= {MAX_COUNTER_DEPTH}")
+
+
+def counter_weight_update(
+    w: jax.Array,
+    pre_spike: jax.Array,
+    post_spike: jax.Array,
+    pre_words: jax.Array,
+    post_words: jax.Array,
+    params: STDPParams,
+    *,
+    depth: int,
+    window: str,
+    eta: float = 1.0,
+    w_min: float = 0.0,
+    w_max: float = 1.0,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused explicit-Δt STDP update from per-neuron counter words.
+
+    ``pre_words``/``post_words`` are one uint8 saturating last-spike
+    counter per neuron; semantics match the reference
+    ``CounterRule.delta`` datapath followed by the clipped accumulate
+    (validated by tests/test_counter_backend.py).
+    """
+    _check_depth(depth)
+    n_pre, n_post = w.shape
+    if not use_kernel:
+        return counter_stdp_update_ref(
+            w,
+            pre_spike,
+            post_spike,
+            pre_words,
+            post_words,
+            depth=depth,
+            window=window,
+            a_plus=params.a_plus,
+            a_minus=params.a_minus,
+            tau_plus=params.tau_plus,
+            tau_minus=params.tau_minus,
+            eta=eta,
+            w_min=w_min,
+            w_max=w_max,
+        )
+
+    p_pre = _round_up(n_pre, LANE)
+    p_post = _round_up(n_post, LANE)
+    out = counter_stdp_update(
+        _pad_axis(_pad_axis(w, p_pre, 0), p_post, 1),
+        _pad_axis(pre_spike.astype(jnp.float32), p_pre, 0),
+        _pad_axis(post_spike.astype(jnp.float32), p_post, 0),
+        _pad_axis(pre_words.astype(jnp.uint8), p_pre, 0),
+        _pad_axis(post_words.astype(jnp.uint8), p_post, 0),
+        depth=depth,
+        window=window,
+        a_plus=params.a_plus,
+        a_minus=params.a_minus,
+        tau_plus=params.tau_plus,
+        tau_minus=params.tau_minus,
+        eta=eta,
+        w_min=w_min,
+        w_max=w_max,
+        tile_pre=_tile(p_pre),
+        tile_post=_tile(p_post),
+        interpret=_resolve_interpret(interpret),
+    )
+    return out[:n_pre, :n_post]
+
+
+def counter_synapse_delta(
+    pre_spike: jax.Array,
+    post_spike: jax.Array,
+    pre_words: jax.Array,
+    post_words: jax.Array,
+    params: STDPParams,
+    *,
+    depth: int,
+    window: str,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Raw Δw (pre × post) from counter words — no clip, no ``w``.
+
+    The counter twin of ``itp_stdp.ops.synapse_delta``: batched callers
+    (the SNN fc layers) vmap this over the batch, accumulate, and apply
+    clip/quantise once — reuses the fused kernel with a zero weight tile
+    and an unbounded clip window.
+    """
+    n_pre = pre_words.shape[-1]
+    n_post = post_words.shape[-1]
+    zero_w = jnp.zeros((n_pre, n_post), jnp.float32)
+    return counter_weight_update(
+        zero_w,
+        pre_spike,
+        post_spike,
+        pre_words,
+        post_words,
+        params,
+        depth=depth,
+        window=window,
+        eta=1.0,
+        w_min=float("-inf"),
+        w_max=float("inf"),
+        use_kernel=use_kernel,
+        interpret=interpret,
+    )
+
+
+def conv_counter_synapse_delta(
+    pre_patches: jax.Array,
+    post_spikes: jax.Array,
+    pre_words: jax.Array,
+    post_words: jax.Array,
+    params: STDPParams,
+    *,
+    depth: int,
+    window: str,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    tile_m: int = 128,
+) -> jax.Array:
+    """Raw (K, C) conv-layer delta from im2col'd counter words.
+
+    ``pre_words`` (M, K) / ``post_words`` (M, C) carry one uint8 counter
+    word per patch element / output neuron, gathered into the im2col
+    layout by ``itp_stdp_conv.ops.im2col_words_2d/1d`` (the dtype-
+    preserving gather — the window readout commutes with it).  Callers
+    apply the eta / (B · P) normalisation, clip, and quantisation, the
+    same contract as ``conv_synapse_delta``.
+    """
+    _check_depth(depth)
+    m, kk = pre_patches.shape
+    cc = post_spikes.shape[1]
+    if not use_kernel:
+        return counter_conv_delta_ref(
+            pre_patches,
+            post_spikes,
+            pre_words,
+            post_words,
+            depth=depth,
+            window=window,
+            a_plus=params.a_plus,
+            a_minus=params.a_minus,
+            tau_plus=params.tau_plus,
+            tau_minus=params.tau_minus,
+        )
+
+    tm = min(tile_m, _round_up(m, SUBLANE))
+    pm = _round_up(m, tm)
+    pk = _round_up(kk, LANE)
+    pc = _round_up(cc, LANE)
+    out = counter_conv_delta(
+        _pad_axis(_pad_axis(pre_patches, pm, 0), pk, 1),
+        _pad_axis(_pad_axis(post_spikes, pm, 0), pc, 1),
+        _pad_axis(_pad_axis(pre_words.astype(jnp.uint8), pm, 0), pk, 1),
+        _pad_axis(_pad_axis(post_words.astype(jnp.uint8), pm, 0), pc, 1),
+        depth=depth,
+        window=window,
+        a_plus=params.a_plus,
+        a_minus=params.a_minus,
+        tau_plus=params.tau_plus,
+        tau_minus=params.tau_minus,
+        tile_m=tm,
+        interpret=_resolve_interpret(interpret),
+    )
+    return out[:kk, :cc]

@@ -1,0 +1,140 @@
+"""Pure-jnp oracle for the fused counter-rule (explicit-Δt STDP) kernels.
+
+The conventional datapath the paper's Tables III-V monetise: a per-neuron
+last-spike counter is broadcast to every synapse, the per-pair timing
+difference Δt formed, and a window function evaluated **per pair** — the
+O(n²) transcendental/select work the intrinsic-timing register read
+collapses to O(n).  Three windows, matching the paper's baseline hierarchy:
+
+  * ``exact``  — base-e exponential ([26]/[28]-style original STDP)
+  * ``linear`` — the PWL approximation of [24] (matched value/slope at
+                 dt=0, zero at the 2τ window edge)
+  * ``imstdp`` — the integer-grid LUT of [23] (counters are already
+                 integer, so the lookup loses nothing — the storage/op
+                 cost, not the values, is what differs from ``exact``)
+
+This module is the single owner of the window semantics:
+``repro.plasticity.rules`` evaluates the same callables on its reference
+readout path, so the kernel oracle and the rule registry cannot drift.
+
+A counter at value t means the neuron last spiked t steps ago; counters
+saturate at ``depth`` (one past the last valid delay ``depth - 1``), and
+the validity gate zeroes every saturated pair.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def window_exact(dt: jax.Array, amplitude: float, tau: float, depth: int) -> jax.Array:
+    del depth
+    return amplitude * jnp.exp(-dt / tau)
+
+
+def window_linear(dt: jax.Array, amplitude: float, tau: float, depth: int) -> jax.Array:
+    # PWL of [24]: matched value/slope at dt=0, zero at the 2τ window edge
+    del depth
+    return amplitude * jnp.clip(1.0 - dt / (2.0 * tau), 0.0, 1.0)
+
+
+def window_lut(amplitude: float, tau: float, depth: int) -> jax.Array:
+    """The [23] LUT on the integer delay grid: one row per valid delay.
+
+    The validity gate zeroes everything past ``depth - 1``, so the index
+    clip in :func:`window_imstdp` never aliases a live delay onto the last
+    row.  This is also the table the fused kernel reads from SMEM.
+    """
+    return amplitude * jnp.exp(-jnp.arange(depth, dtype=jnp.float32) / tau)
+
+
+def window_imstdp(dt: jax.Array, amplitude: float, tau: float, depth: int) -> jax.Array:
+    lut = window_lut(amplitude, tau, depth)
+    k = jnp.clip(dt.astype(jnp.int32), 0, depth - 1)
+    return lut[k]
+
+
+WINDOWS = {"exact": window_exact, "linear": window_linear, "imstdp": window_imstdp}
+
+
+def counter_magnitudes(
+    t: jax.Array, amplitude: float, tau: float, *, depth: int, window: str
+) -> jax.Array:
+    """Per-neuron window magnitude gated by counter validity: ``f(t)·[t<d]``."""
+    valid = t <= depth - 1
+    return WINDOWS[window](t.astype(jnp.float32), amplitude, tau, depth) * valid
+
+
+def counter_stdp_update_ref(
+    w: jax.Array,
+    pre_spike: jax.Array,
+    post_spike: jax.Array,
+    pre_t: jax.Array,
+    post_t: jax.Array,
+    *,
+    depth: int,
+    window: str,
+    a_plus: float,
+    a_minus: float,
+    tau_plus: float,
+    tau_minus: float,
+    eta: float = 1.0,
+    w_min: float = 0.0,
+    w_max: float = 1.0,
+) -> jax.Array:
+    """Reference semantics of the fused dense counter kernel.
+
+    ``pre_t``/``post_t`` are per-neuron last-spike counters (any integer
+    dtype); the Δt broadcast and the per-pair window evaluation mirror
+    ``repro.plasticity.rules.CounterRule.delta`` exactly.
+    """
+    fn = WINDOWS[window]
+    pre_t = pre_t.astype(jnp.int32)
+    post_t = post_t.astype(jnp.int32)
+    dt_ltp = pre_t[:, None].astype(jnp.float32)  # (n_pre, 1)
+    dt_ltd = post_t[None, :].astype(jnp.float32)  # (1, n_post)
+    ltp_mag = fn(dt_ltp, a_plus, tau_plus, depth) * (pre_t[:, None] <= depth - 1)
+    ltd_mag = fn(dt_ltd, a_minus, tau_minus, depth) * (post_t[None, :] <= depth - 1)
+
+    pre_s = pre_spike.astype(jnp.bool_)
+    post_s = post_spike.astype(jnp.bool_)
+    fire_xor = jnp.logical_xor(pre_s[:, None], post_s[None, :])
+    ltp_en = jnp.logical_and(fire_xor, post_s[None, :]).astype(jnp.float32)
+    ltd_en = jnp.logical_and(fire_xor, pre_s[:, None]).astype(jnp.float32)
+
+    dw = ltp_en * ltp_mag - ltd_en * ltd_mag
+    return jnp.clip(w.astype(jnp.float32) + eta * dw, w_min, w_max)
+
+
+def counter_conv_delta_ref(
+    pre_patches: jax.Array,
+    post_spikes: jax.Array,
+    pre_t: jax.Array,
+    post_t: jax.Array,
+    *,
+    depth: int,
+    window: str,
+    a_plus: float,
+    a_minus: float,
+    tau_plus: float,
+    tau_minus: float,
+) -> jax.Array:
+    """Reference semantics of the fused conv counter kernel.
+
+    ``pre_t`` (M, K) carries the last-spike counter of each patch element's
+    source pixel (window readout commutes with the im2col gather), ``post_t``
+    (M, C) the output-neuron counters; the pair-gated patch-row contraction
+    matches the history-rule conv oracle's formulation.
+    """
+    ltp_mag = counter_magnitudes(
+        pre_t.astype(jnp.int32), a_plus, tau_plus, depth=depth, window=window
+    )
+    ltd_mag = counter_magnitudes(
+        post_t.astype(jnp.int32), a_minus, tau_minus, depth=depth, window=window
+    )
+    pre = pre_patches.astype(jnp.float32)
+    post = post_spikes.astype(jnp.float32)
+    dw_ltp = jnp.einsum("mk,mc->kc", (1.0 - pre) * ltp_mag, post)
+    dw_ltd = jnp.einsum("mk,mc->kc", pre, (1.0 - post) * ltd_mag)
+    return dw_ltp - dw_ltd

@@ -15,10 +15,12 @@ Pallas datapath (and the counter-rule baselines) end-to-end.
 
 ``--snn <net>`` switches to the paper's network workloads (2-layer SNN,
 6-layer DCSNN, 5-layer CSNN) on the same selectable rule and backend:
-the conv nets drive the im2col-fused conv kernel, the fc layers the
-dense engine kernel — the launcher path for the whole-network fused
-datapath.  Kernel-less rules on fused* backends are rejected up front
-with the valid combinations (rule × backend matrix in ROADMAP.md).
+the conv nets drive the rule's im2col-fused conv kernel, the fc layers
+its dense engine kernel — the launcher path for the whole-network fused
+datapath.  Every registered rule is kernel-backed (history rules →
+``itp_stdp``/``itp_stdp_conv``, counter rules → ``itp_counter``), so the
+full rule × backend matrix in ROADMAP.md runs from here; a rule without
+a kernel would still be rejected up front with the valid combinations.
 """
 from __future__ import annotations
 
@@ -157,8 +159,8 @@ def main():
                     help="train one of the paper's SNNs instead of the LM "
                          "stack (conv nets exercise the fused conv kernel)")
     ap.add_argument("--rule", default="itp", choices=plasticity.rule_names(),
-                    help="learning rule (--engine and --snn modes); "
-                         "kernel-less rules require --backend reference")
+                    help="learning rule (--engine and --snn modes); every "
+                         "rule runs on every --backend")
     ap.add_argument("--backend", default="reference", choices=BACKENDS,
                     help="weight-update datapath (--engine and --snn modes)")
     ap.add_argument("--engine-pre", type=int, default=256)

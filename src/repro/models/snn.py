@@ -10,14 +10,14 @@ All layers learn with a selectable learning rule from the
 *parity* comparison is apples-to-apples.  Convolutional STDP applies the
 pair-based rule per (patch-pixel → output-neuron) synapse, accumulated over
 spatial positions at the patch level (the dense layer is the 1×1 special
-case): for the history rules conv layers route every backend through the
-im2col-fused kernel package (``repro.kernels.itp_stdp_conv``) — pure-jnp
-reference, compiled Pallas kernel, or the interpreted kernel — and fc
-layers through the dense engine kernel; counter rules take the reference
-magnitude-readout path (fused* is rejected at config construction).
-Readout is a deterministic ridge regression on time-averaged spike counts
-— identical across rules, so accuracy differences isolate the learning
-rule.
+case): every rule routes every backend through its im2col-fused kernel
+package (``repro.kernels.itp_stdp_conv`` for the history rules,
+``repro.kernels.itp_counter`` for the counter rules) — pure-jnp reference,
+compiled Pallas kernel, or the interpreted kernel — and fc layers through
+the rule's dense engine kernel, so the full rule × backend matrix runs
+end-to-end at the network level.  Readout is a deterministic ridge
+regression on time-averaged spike counts — identical across rules, so
+accuracy differences isolate the learning rule.
 
 For the history rules, weight-update magnitudes come from the same
 bitplane histories as the learning engine: ``itp`` reads the history
@@ -37,15 +37,11 @@ import jax
 import jax.numpy as jnp
 
 from repro import plasticity
-from repro.core.history import pack_words, registers_depth_major
 from repro.core.lif import (IzhikevichParams, LIFParams, izhikevich_init,
                             izhikevich_step, lif_init, lif_step)
 from repro.core.stdp import STDPParams
-from repro.kernels.itp_stdp.ops import (resolve_backend, synapse_delta,
-                                        synapse_delta_packed)
-from repro.kernels.itp_stdp_conv.ops import (conv_synapse_delta,
-                                             conv_synapse_delta_packed,
-                                             im2col_1d, im2col_2d,
+from repro.kernels.dispatch import resolve_backend
+from repro.kernels.itp_stdp_conv.ops import (im2col_1d, im2col_2d,
                                              im2col_words_1d, im2col_words_2d)
 
 
@@ -292,118 +288,88 @@ def _quantise(w: jax.Array, cfg: SNNConfig) -> jax.Array:
 
 def _fused_fc_delta(cfg: SNNConfig, st: "LayerState", s_in: jax.Array,
                     s_out: jax.Array) -> jax.Array:
-    """Batch-summed Δw for an fc layer via the fused Pallas kernel.
+    """Batch-summed Δw for an fc layer via the rule's fused Pallas kernel.
 
     The fc layer is the engine's dense synapse matrix replicated over the
-    batch: per sample the update is the same XOR-gated rank-1 outer product
-    the kernel fuses, so we vmap the Δw read over the batch and accumulate.
-    Equivalent to the reference einsum path (tests/test_backend.py).
+    batch: per sample the update is the same tile update the rule's kernel
+    fuses (XOR-gated rank-1 outer product for the history rules, per-pair
+    windowed Δt for the counter rules), so we vmap the Δw read over the
+    batch and accumulate.  Equivalent to the reference einsum path
+    (tests/test_backend.py, tests/test_counter_backend.py).
     """
+    rule = cfg.learning_rule()
     B = s_in.shape[0]
     pre = s_in.reshape(B, -1)                       # (B, fan_in)
     post = s_out.reshape(B, -1)                     # (B, n_out)
     _, interpret = resolve_backend(cfg.backend)
-    if cfg.use_packed_history():
-        # packed storage format (default): one uint8 register word per
-        # neuron crosses into the kernel instead of (depth, n) float32
-        # bitplanes; histories are stored flat over (B · n)
-        pre_words = pack_words(st.pre_hist).reshape(B, -1)    # (B, fan_in)
-        post_words = pack_words(st.post_hist).reshape(B, -1)  # (B, n_out)
+    pre_read = rule.kernel_readout(st.pre_hist, packed=cfg.use_packed_history())
+    post_read = rule.kernel_readout(st.post_hist, packed=cfg.use_packed_history())
+    if pre_read.ndim == 1:
+        # per-neuron word readout (packed register words / counter words):
+        # one uint8 per neuron, stored flat over (B · n)
+        pre_read = pre_read.reshape(B, -1)          # (B, fan_in)
+        post_read = post_read.reshape(B, -1)        # (B, n_out)
+    else:
+        # unpacked oracle datapath: per-sample depth-major bitplane views
+        pre_read = pre_read.reshape(
+            cfg.depth, B, -1).transpose(1, 0, 2)    # (B, depth, fan_in)
+        post_read = post_read.reshape(
+            cfg.depth, B, -1).transpose(1, 0, 2)    # (B, depth, n_out)
 
-        def one_packed(p, q, pw, qw):
-            return synapse_delta_packed(
-                p, q, pw, qw, cfg.stdp, depth=cfg.depth,
-                pairing=cfg.pairing, compensate=cfg.compensate,
-                interpret=interpret)
+    def one(p, q, pr, qr):
+        return rule.fused_delta_from_readout(
+            p, q, pr, qr, cfg.stdp, depth=cfg.depth, pairing=cfg.pairing,
+            compensate=cfg.compensate, interpret=interpret)
 
-        return jax.vmap(one_packed)(pre, post, pre_words,
-                                    post_words).sum(axis=0)
-    # unpacked oracle datapath: per-sample depth-major bitplane views
-    pre_bits = registers_depth_major(st.pre_hist).reshape(
-        cfg.depth, B, -1).transpose(1, 0, 2)        # (B, depth, fan_in)
-    post_bits = registers_depth_major(st.post_hist).reshape(
-        cfg.depth, B, -1).transpose(1, 0, 2)        # (B, depth, n_out)
-
-    def one(p, q, pb, qb):
-        return synapse_delta(p, q, pb, qb, cfg.stdp, pairing=cfg.pairing,
-                             compensate=cfg.compensate, interpret=interpret)
-
-    return jax.vmap(one)(pre, post, pre_bits, post_bits).sum(axis=0)
+    return jax.vmap(one)(pre, post, pre_read, post_read).sum(axis=0)
 
 
 def _conv_delta(cfg: SNNConfig, spec: SNNLayerSpec, st: "LayerState",
                 patches: jax.Array, s_out: jax.Array,
                 in_shape: tuple) -> jax.Array:
-    """Batch+position-summed Δw for a conv layer via the patch-level kernel.
+    """Batch+position-summed Δw for a conv layer via the rule's patch path.
 
     The conv STDP update is the dense pair rule per (patch element → output
     channel) synapse accumulated over batch and spatial positions; after
     im2col it is two matmuls contracting the patch-row axis, which the
-    ``itp_stdp_conv`` kernel fuses with the po2 history read.  All three
-    backends route here: ``reference`` takes the pure-jnp oracle,
-    ``fused``/``fused_interpret`` the Pallas kernel (compiled /
-    interpreted).  The bitplane registers are gathered into the same im2col
-    layout as the spikes, so each patch element carries the full depth
-    history of its source pixel.
+    rule's conv kernel fuses with its timing readout (po2 history read for
+    the history rules, per-element windowed Δt for the counter rules).
+    Every rule × backend cell routes here: ``reference`` takes the rule's
+    pure-jnp oracle, ``fused``/``fused_interpret`` its Pallas kernel
+    (compiled / interpreted).  The timing readout is gathered into the
+    same im2col layout as the spikes — readout commutes with the gather,
+    each patch element carries its source pixel's timing state.
     """
+    rule = cfg.learning_rule()
     use_kernel, interpret = resolve_backend(cfg.backend)
     B = s_out.shape[0]
-    if use_kernel and cfg.use_packed_history():
-        # packed storage format (default on the kernel path): im2col the
-        # (M, K) uint8 register words once — one byte per patch element —
-        # instead of gathering (depth, M, K) float32 bitplane patches
+    packed = use_kernel and cfg.use_packed_history()
+    pre_read = rule.kernel_readout(st.pre_hist, packed=packed)
+    post_read = rule.kernel_readout(st.post_hist, packed=packed)
+    if pre_read.ndim == 1:
+        # per-neuron word readout (packed register words / counter words):
+        # im2col the (M, K) uint8 words once — one byte per patch element
         im2col_w = im2col_words_2d if spec.kind == "conv2d" else im2col_words_1d
-        pre_words = pack_words(st.pre_hist).reshape((B,) + tuple(in_shape))
-        pre_words = im2col_w(pre_words, spec.kernel, spec.stride)
-        pre_words = pre_words.reshape(-1, pre_words.shape[-1])   # (M, K)
-        post_words = pack_words(st.post_hist).reshape(-1, s_out.shape[-1])
-        return conv_synapse_delta_packed(
-            patches.reshape(-1, patches.shape[-1]),  # (M, K)
-            s_out.reshape(-1, s_out.shape[-1]),      # (M, C)
-            pre_words, post_words, cfg.stdp, depth=cfg.depth,
-            pairing=cfg.pairing, compensate=cfg.compensate,
-            interpret=interpret)
-    im2col = im2col_2d if spec.kind == "conv2d" else im2col_1d
-    pre_bits = registers_depth_major(st.pre_hist).astype(jnp.float32)
-    pre_bits = pre_bits.reshape((cfg.depth, B) + tuple(in_shape))
-    pre_bits = jax.vmap(
-        lambda p: im2col(p, spec.kernel, spec.stride))(pre_bits)
-    pre_bits = pre_bits.reshape(cfg.depth, -1, pre_bits.shape[-1])
-    post_bits = registers_depth_major(st.post_hist).astype(jnp.float32)
-    post_bits = post_bits.reshape(cfg.depth, -1, s_out.shape[-1])
-    return conv_synapse_delta(
+        pre_read = im2col_w(pre_read.reshape((B,) + tuple(in_shape)),
+                            spec.kernel, spec.stride)
+        pre_read = pre_read.reshape(-1, pre_read.shape[-1])      # (M, K)
+        post_read = post_read.reshape(-1, s_out.shape[-1])       # (M, C)
+    else:
+        # unpacked bitplane oracle layout: (depth, M, ·) float32 patches
+        im2col = im2col_2d if spec.kind == "conv2d" else im2col_1d
+        pre_read = pre_read.astype(jnp.float32)
+        pre_read = pre_read.reshape((cfg.depth, B) + tuple(in_shape))
+        pre_read = jax.vmap(
+            lambda p: im2col(p, spec.kernel, spec.stride))(pre_read)
+        pre_read = pre_read.reshape(cfg.depth, -1, pre_read.shape[-1])
+        post_read = post_read.astype(jnp.float32).reshape(
+            cfg.depth, -1, s_out.shape[-1])
+    return rule.conv_delta_from_readout(
         patches.reshape(-1, patches.shape[-1]),      # (M, K)
         s_out.reshape(-1, s_out.shape[-1]),          # (M, C)
-        pre_bits, post_bits, cfg.stdp, pairing=cfg.pairing,
-        compensate=cfg.compensate, use_kernel=use_kernel,
-        interpret=interpret)
-
-
-def _counter_conv_delta(cfg: SNNConfig, spec: SNNLayerSpec, st: "LayerState",
-                        patches: jax.Array, s_out: jax.Array,
-                        in_shape: tuple) -> jax.Array:
-    """Patch-level Δw for a conv layer under a kernel-less (counter) rule.
-
-    Counter rules carry one last-spike delay per neuron, so the per-source-
-    pixel LTP magnitudes are read first and then gathered into the im2col
-    patch layout (readout commutes with the gather — each patch element's
-    magnitude depends only on its source pixel), followed by the same
-    pair-gated patch-row contraction as the history-rule oracle.
-    Reference backend only; fused* is rejected at config construction.
-    """
-    B = s_out.shape[0]
-    im2col = im2col_2d if spec.kind == "conv2d" else im2col_1d
-    ltp = _rule_magnitude(st.pre_hist, (B,) + tuple(in_shape),
-                          cfg.stdp.a_plus, cfg.stdp.tau_plus, cfg)
-    ltp_p = im2col(ltp, spec.kernel, spec.stride)
-    ltp_p = ltp_p.reshape(-1, patches.shape[-1])     # (M, K)
-    ltd = _rule_magnitude(st.post_hist, (-1, s_out.shape[-1]),
-                          cfg.stdp.a_minus, cfg.stdp.tau_minus, cfg)  # (M, C)
-    pre = patches.reshape(-1, patches.shape[-1])
-    post = s_out.reshape(-1, s_out.shape[-1])
-    dw_ltp = jnp.einsum("mk,mc->kc", (1.0 - pre) * ltp_p, post)
-    dw_ltd = jnp.einsum("mk,mc->kc", pre, (1.0 - post) * ltd)
-    return dw_ltp - dw_ltd
+        pre_read, post_read, cfg.stdp, depth=cfg.depth,
+        pairing=cfg.pairing, compensate=cfg.compensate,
+        use_kernel=use_kernel, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -466,23 +432,16 @@ def _learnable_step(spec: SNNLayerSpec, cfg: SNNConfig, w: jax.Array,
     # --- STDP update (dispatched through the selected LearningRule) -------
     rule = cfg.learning_rule()
     if train and spec.kind != "fc":
-        if rule.has_kernel:
-            # history rules: patch-level im2col-fused kernel package, all
-            # three backends (reference oracle / compiled Pallas /
-            # interpreted)
-            dw = _conv_delta(cfg, spec, st, patches, s_out,
-                             spikes_in.shape[1:])
-        else:
-            # counter rules: magnitude readout gathered into the patch
-            # layout (reference only)
-            dw = _counter_conv_delta(cfg, spec, st, patches, s_out,
-                                     spikes_in.shape[1:])
+        # patch-level conv path, all rules × all backends: the rule's
+        # im2col-fused kernel package (itp_stdp_conv for the history
+        # rules, itp_counter for the counter rules) or its jnp oracle
+        dw = _conv_delta(cfg, spec, st, patches, s_out,
+                         spikes_in.shape[1:])
         denom = float(B * patches.shape[1])
         w = jnp.clip(w + cfg.eta * dw / denom, 0.0, 1.0)
         w = _quantise(w, cfg)
     elif train and cfg.backend != "reference":
-        # fused engine datapath (history rules only — config validation
-        # rejects kernel-less rules on fused*): per-sample Δw from the
+        # fused engine datapath: per-sample Δw from the rule's dense
         # Pallas kernel, batch-accumulated, then the same clip + quantise
         # as the reference
         dw = _fused_fc_delta(cfg, st, s_in, s_out)

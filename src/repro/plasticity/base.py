@@ -18,12 +18,17 @@ and the sharded engine all build on) and a dense ``readout`` view (for
 ``shard_map``, which needs plain arrays) are part of the protocol too.
 
 Rules register by name; ``EngineConfig.rule`` / ``SNNConfig.rule`` select
-one alongside ``backend``.  Only rules with ``has_kernel=True`` (the
-intrinsic-timing family, whose state *is* the kernel operand) can ride
-the fused Pallas datapaths — :func:`resolve_rule_backend` rejects
-kernel-less rule + ``fused*`` combinations at config-construction time
-with the full option list, so the rule × backend matrix (ROADMAP) is
-explicit rather than discovered at trace time.
+one alongside ``backend``.  Every rule that sets ``has_kernel=True`` owns
+its fused Pallas datapath through the ``kernel_readout`` /
+``fused_update_from_readout`` / ``fused_delta_from_readout`` /
+``conv_delta_from_readout`` hooks: the intrinsic-timing family routes to
+the ``itp_stdp`` / ``itp_stdp_conv`` kernels, the explicit-Δt counter
+family to the ``itp_counter`` kernels — so the engine, the sharded
+engine, and the SNN layers dispatch through the rule instead of
+hard-wiring one kernel package.  A rule without a kernel is rejected on
+the ``fused*`` backends at config-construction time with the full option
+list (:func:`resolve_rule_backend`), so the rule × backend matrix
+(ROADMAP) is explicit rather than discovered at trace time.
 """
 
 from __future__ import annotations
@@ -69,15 +74,104 @@ class LearningRule(abc.ABC):
         """
 
     def readout_packed(self, state: Any) -> jax.Array:
-        """Packed ``(n,)`` uint8 view of the state — one register word per
-        neuron (``repro.core.history.pack_words``, MSB = most recent).
+        """Packed ``(n,)`` uint8 view of the state — one word per neuron.
 
-        The storage format the fused Pallas kernels consume (depth ≤ 8);
-        shards along axis 0.  Only kernel-backed rules (``has_kernel``)
+        For the history rules this is the register word of the paper's
+        8-bit register file (``repro.core.history.pack_words``, MSB =
+        most recent, depth ≤ 8); for the counter rules it is the
+        saturating last-spike counter itself.  Either way it is the
+        storage format the rule's fused Pallas kernel consumes and shards
+        along axis 0.  Only kernel-backed rules (``has_kernel``)
         implement it — the fused datapaths are unreachable for the others
         (:func:`resolve_rule_backend` rejects them at config time).
         """
         raise NotImplementedError(f"rule {self.name!r} has no packed (kernel) state layout")
+
+    # -- fused (kernel) datapath ---------------------------------------
+    # Rules with ``has_kernel=True`` own their fused Pallas datapath via
+    # these hooks; the engine, sharded engine, and SNN layers dispatch
+    # through them instead of importing a kernel package directly.
+
+    def kernel_readout(self, state: Any, *, packed: bool) -> jax.Array:
+        """The state view the rule's fused kernel consumes.
+
+        ``packed=True`` selects the per-neuron word layout (``(n,)``
+        uint8, axis-0 sharded); ``packed=False`` the dense row layout
+        (``(rows, n)`` float32, axis-1 sharded).  Rules whose kernel has
+        a single natural operand layout (the counter rules: one uint8
+        word per neuron either way) may ignore ``packed``.
+        """
+        raise NotImplementedError(f"rule {self.name!r} has no fused kernel")
+
+    def kernel_readout_axes(self, *, packed: bool) -> int:
+        """ndim of :meth:`kernel_readout`'s result (1 = words, 2 = rows).
+
+        Lets ``shard_map`` callers build partition specs before any state
+        exists: a 1-D word readout shards along axis 0, a 2-D row readout
+        along axis 1.
+        """
+        raise NotImplementedError(f"rule {self.name!r} has no fused kernel")
+
+    def fused_update_from_readout(
+        self,
+        w: jax.Array,
+        pre_spike: jax.Array,
+        post_spike: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        eta: float = 1.0,
+        w_min: float = 0.0,
+        w_max: float = 1.0,
+        interpret: bool = False,
+    ) -> jax.Array:
+        """Fused clipped weight RMW from :meth:`kernel_readout` views."""
+        raise NotImplementedError(f"rule {self.name!r} has no fused kernel")
+
+    def fused_delta_from_readout(
+        self,
+        pre_spike: jax.Array,
+        post_spike: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        interpret: bool = False,
+    ) -> jax.Array:
+        """Raw fused ``(n_pre, n_post)`` Δw (no eta/clip) — the batched
+        SNN fc layers vmap this over samples and accumulate."""
+        raise NotImplementedError(f"rule {self.name!r} has no fused kernel")
+
+    def conv_delta_from_readout(
+        self,
+        pre_patches: jax.Array,
+        post_spikes: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        use_kernel: bool = True,
+        interpret: bool = False,
+    ) -> jax.Array:
+        """Raw ``(K, C)`` conv-layer delta from im2col'd readout views.
+
+        ``pre_read``/``post_read`` are :meth:`kernel_readout` views
+        gathered into the im2col patch layout by the caller; unlike the
+        dense hooks this one also serves ``use_kernel=False`` (the
+        pure-jnp oracle), so conv layers have exactly one dispatch path
+        per rule.
+        """
+        raise NotImplementedError(f"rule {self.name!r} has no fused kernel")
 
     @abc.abstractmethod
     def magnitudes_from_readout(

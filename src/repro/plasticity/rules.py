@@ -16,7 +16,13 @@ Two families, matching the paper's §I taxonomy:
     monetise.  ``exact`` (base-e exponential, [26]/[28]-style — the
     CounterEngine of ``repro.core.baseline`` folded into the rule API),
     ``linear`` (the PWL approximation of [24]) and ``imstdp`` (the
-    integer-grid LUT of [23]).  Reference (jnp) backend only.
+    integer-grid LUT of [23]).  The window semantics live in
+    ``repro.kernels.itp_counter.ref`` (shared with the fused Pallas
+    counter kernels, so the jnp reference and the kernel oracle cannot
+    drift); the fused* backends run the same per-pair datapath on-chip
+    style — Δt formed in-register from the counter word, window fused
+    with the weight accumulate — which is what makes ``rule_cost`` the
+    paper's kernel-vs-kernel speedup comparison.
 
 A counter at value t means the neuron last spiked t steps ago (t=0: the
 previous step — spikes are recorded *after* the weight update, exactly
@@ -35,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.core import history as H
 from repro.core.stdp import STDPParams, magnitudes_depth_major, pair_gate
+from repro.kernels.itp_counter.ref import WINDOWS, counter_magnitudes
 from repro.plasticity.base import LearningRule, register_rule
 
 
@@ -82,49 +89,120 @@ class HistoryRule(LearningRule):
         # (equivalence pinned by tests/test_plasticity.py)
         return H.latest(state).astype(jnp.float32)
 
+    # -- fused (kernel) datapath: the itp_stdp / itp_stdp_conv packages --
 
-def _window_exact(dt: jax.Array, amplitude: float, tau: float, depth: int) -> jax.Array:
-    del depth
-    return amplitude * jnp.exp(-dt / tau)
+    def kernel_readout(self, state: H.SpikeHistory, *, packed: bool) -> jax.Array:
+        return self.readout_packed(state) if packed else self.readout(state)
 
+    def kernel_readout_axes(self, *, packed: bool) -> int:
+        return 1 if packed else 2
 
-def _window_linear(dt: jax.Array, amplitude: float, tau: float, depth: int) -> jax.Array:
-    # PWL of [24]: matched value/slope at dt=0, zero at the 2τ window edge
-    del depth
-    return amplitude * jnp.clip(1.0 - dt / (2.0 * tau), 0.0, 1.0)
+    def fused_update_from_readout(
+        self,
+        w: jax.Array,
+        pre_spike: jax.Array,
+        post_spike: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        eta: float = 1.0,
+        w_min: float = 0.0,
+        w_max: float = 1.0,
+        interpret: bool = False,
+    ) -> jax.Array:
+        # deferred import: repro.core must stay importable from the kernel
+        # packages' own modules (ops.py imports repro.core.history)
+        from repro.kernels.itp_stdp.ops import weight_update_depth_major, weight_update_packed
 
+        kw = dict(
+            pairing=pairing,
+            compensate=compensate,
+            eta=eta,
+            w_min=w_min,
+            w_max=w_max,
+            interpret=interpret,
+        )
+        if pre_read.ndim == 1:  # packed uint8 register words
+            return weight_update_packed(
+                w, pre_spike, post_spike, pre_read, post_read, p, depth=depth, **kw
+            )
+        return weight_update_depth_major(w, pre_spike, post_spike, pre_read, post_read, p, **kw)
 
-def _window_imstdp(dt: jax.Array, amplitude: float, tau: float, depth: int) -> jax.Array:
-    # LUT of [23] on the integer index grid; counters are already integer,
-    # so the lookup loses nothing — the storage/op cost, not the values,
-    # is what differs from 'exact' here (benchmarks/engine_cost.OP_MODEL).
-    # One row per valid delay: the validity gate zeroes everything past
-    # depth-1, so the clip never aliases a live delay onto the last row.
-    lut = amplitude * jnp.exp(-jnp.arange(depth, dtype=jnp.float32) / tau)
-    k = jnp.clip(dt.astype(jnp.int32), 0, depth - 1)
-    return lut[k]
+    def fused_delta_from_readout(
+        self,
+        pre_spike: jax.Array,
+        post_spike: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        interpret: bool = False,
+    ) -> jax.Array:
+        from repro.kernels.itp_stdp.ops import synapse_delta, synapse_delta_packed
 
+        kw = dict(pairing=pairing, compensate=compensate, interpret=interpret)
+        if pre_read.ndim == 1:  # packed uint8 register words
+            return synapse_delta_packed(
+                pre_spike, post_spike, pre_read, post_read, p, depth=depth, **kw
+            )
+        return synapse_delta(pre_spike, post_spike, pre_read, post_read, p, **kw)
 
-_WINDOWS = {"exact": _window_exact, "linear": _window_linear, "imstdp": _window_imstdp}
+    def conv_delta_from_readout(
+        self,
+        pre_patches: jax.Array,
+        post_spikes: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        use_kernel: bool = True,
+        interpret: bool = False,
+    ) -> jax.Array:
+        from repro.kernels.itp_stdp_conv.ops import conv_synapse_delta, conv_synapse_delta_packed
+
+        kw = dict(
+            pairing=pairing,
+            compensate=compensate,
+            use_kernel=use_kernel,
+            interpret=interpret,
+        )
+        if pre_read.ndim == 2:  # (M, K) packed words (bitplanes are (depth, M, K))
+            return conv_synapse_delta_packed(
+                pre_patches, post_spikes, pre_read, post_read, p, depth=depth, **kw
+            )
+        return conv_synapse_delta(pre_patches, post_spikes, pre_read, post_read, p, **kw)
 
 
 @dataclasses.dataclass(frozen=True)
 class CounterRule(LearningRule):
     """Conventional Δt-based STDP: last-spike counters + per-pair window.
 
-    Nearest-neighbour only (one counter holds one spike time); reference
-    backend only (no fused kernel — the point of the comparison).  A
-    counter saturates at ``depth`` (one past the last valid delay
-    ``depth-1``), mirroring the finite history window of the po2 rules.
+    Nearest-neighbour only (one counter holds one spike time).  A counter
+    saturates at ``depth`` (one past the last valid delay ``depth-1``),
+    mirroring the finite history window of the po2 rules.  The fused*
+    backends route to ``repro.kernels.itp_counter`` — the same per-pair
+    window datapath run on-chip style (Δt broadcast in-register from the
+    uint8 counter word, window fused with the weight accumulate), so the
+    ``rule_cost`` comparison against the ITP kernels is kernel-vs-kernel.
     """
 
     name: str = "exact"
     window: str = "exact"
-    has_kernel: bool = False
+    has_kernel: bool = True
     compensate: bool | None = None
 
     def _window_fn(self):
-        return _WINDOWS[self.window]
+        return WINDOWS[self.window]
 
     def init_state(self, n: int, depth: int) -> jax.Array:
         # start saturated-invalid: no spike within the window yet
@@ -136,6 +214,12 @@ class CounterRule(LearningRule):
 
     def readout(self, state: jax.Array) -> jax.Array:
         return state.astype(jnp.float32)[None, :]  # (1, n)
+
+    def readout_packed(self, state: jax.Array) -> jax.Array:
+        # the saturating counter IS the word: one uint8 per neuron, the
+        # same shape/sharding contract as the packed history words
+        # (depth <= 255 so the saturation value always fits)
+        return state.astype(jnp.uint8)
 
     def check_pairing(self, pairing: str) -> None:
         if pairing != "nearest":
@@ -156,12 +240,114 @@ class CounterRule(LearningRule):
         compensate: bool = True,
     ) -> jax.Array:
         self.check_pairing(pairing)
-        t = arr[0]
-        valid = t <= depth - 1
-        return self._window_fn()(t, amplitude, tau, depth) * valid
+        return counter_magnitudes(arr[0], amplitude, tau, depth=depth, window=self.window)
 
     def last_spikes(self, state: jax.Array) -> jax.Array:
         return (state == 0).astype(jnp.float32)
+
+    # -- fused (kernel) datapath: the itp_counter package ---------------
+
+    def kernel_readout(self, state: jax.Array, *, packed: bool) -> jax.Array:
+        del packed  # one uint8 counter word per neuron is the only layout
+        return self.readout_packed(state)
+
+    def kernel_readout_axes(self, *, packed: bool) -> int:
+        del packed
+        return 1
+
+    def fused_update_from_readout(
+        self,
+        w: jax.Array,
+        pre_spike: jax.Array,
+        post_spike: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        eta: float = 1.0,
+        w_min: float = 0.0,
+        w_max: float = 1.0,
+        interpret: bool = False,
+    ) -> jax.Array:
+        from repro.kernels.itp_counter.ops import counter_weight_update
+
+        self.check_pairing(pairing)
+        del compensate  # counter windows read τ directly (no po2 read to fix)
+        return counter_weight_update(
+            w,
+            pre_spike,
+            post_spike,
+            pre_read,
+            post_read,
+            p,
+            depth=depth,
+            window=self.window,
+            eta=eta,
+            w_min=w_min,
+            w_max=w_max,
+            interpret=interpret,
+        )
+
+    def fused_delta_from_readout(
+        self,
+        pre_spike: jax.Array,
+        post_spike: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        interpret: bool = False,
+    ) -> jax.Array:
+        from repro.kernels.itp_counter.ops import counter_synapse_delta
+
+        self.check_pairing(pairing)
+        del compensate
+        return counter_synapse_delta(
+            pre_spike,
+            post_spike,
+            pre_read,
+            post_read,
+            p,
+            depth=depth,
+            window=self.window,
+            interpret=interpret,
+        )
+
+    def conv_delta_from_readout(
+        self,
+        pre_patches: jax.Array,
+        post_spikes: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        use_kernel: bool = True,
+        interpret: bool = False,
+    ) -> jax.Array:
+        from repro.kernels.itp_counter.ops import conv_counter_synapse_delta
+
+        self.check_pairing(pairing)
+        del compensate
+        return conv_counter_synapse_delta(
+            pre_patches,
+            post_spikes,
+            pre_read,
+            post_read,
+            p,
+            depth=depth,
+            window=self.window,
+            use_kernel=use_kernel,
+            interpret=interpret,
+        )
 
     def delta(
         self,

@@ -1,0 +1,270 @@
+"""Fused counter-rule datapath ≡ reference: the former ValueError cells of
+the rule × backend matrix, now closed by ``repro.kernels.itp_counter``.
+
+Parity contract (ISSUE 5 / the paper's Tables III-V comparison basis):
+the fused explicit-Δt kernels must be numerically pinned against the jnp
+reference at three levels — raw ops, engine scan, and network trajectory
+— **bit-exact** for the arithmetic windows (``linear`` PWL, ``imstdp``
+LUT) and tight-tolerance for ``exact``'s transcendental (the compiled
+``exp`` may differ from XLA's on real accelerators; on the interpreter it
+happens to agree bit-for-bit, which the tolerance still admits).
+
+The property tests pin the storage format: a saturating last-spike
+counter survives the round-trip through the rule's uint8 word readout and
+the kernel's in-register Δt formation for every depth 1..8, including the
+saturated-invalid value ``depth``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.engine import EngineConfig, init_engine, run_engine
+from repro.core.stdp import STDPParams
+from repro.kernels.itp_counter.kernel import counter_delays
+from repro.kernels.itp_counter.ops import (
+    conv_counter_synapse_delta,
+    counter_synapse_delta,
+    counter_weight_update,
+)
+from repro.models import snn
+from repro.plasticity import get_rule
+
+COUNTER_RULES = ("exact", "linear", "imstdp")
+T_STEPS = 48
+
+
+def _assert_window_close(window, got, want):
+    """Bit-exact for the arithmetic windows, tight-tol for 'exact'."""
+    if window == "exact":
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Ops level: raw kernels vs the jnp reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", COUNTER_RULES)
+@pytest.mark.parametrize("n_pre,n_post", [(32, 24), (130, 70)])
+def test_counter_update_kernel_matches_reference(key, window, n_pre, n_post):
+    depth = 7
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    w = jax.random.uniform(k1, (n_pre, n_post))
+    pre_s = jax.random.bernoulli(k2, 0.4, (n_pre,)).astype(jnp.float32)
+    post_s = jax.random.bernoulli(k3, 0.4, (n_post,)).astype(jnp.float32)
+    # counters cover the full live range AND the saturated-invalid value
+    pre_t = jax.random.randint(k4, (n_pre,), 0, depth + 1).astype(jnp.uint8)
+    post_t = jax.random.randint(k5, (n_post,), 0, depth + 1).astype(jnp.uint8)
+    p = STDPParams()
+    kw = dict(depth=depth, window=window, eta=0.25)
+    ref = counter_weight_update(w, pre_s, post_s, pre_t, post_t, p, use_kernel=False, **kw)
+    fused = counter_weight_update(w, pre_s, post_s, pre_t, post_t, p, interpret=True, **kw)
+    _assert_window_close(window, np.asarray(fused), np.asarray(ref))
+
+
+@pytest.mark.parametrize("window", COUNTER_RULES)
+def test_counter_delta_kernel_matches_reference(key, window):
+    depth = 7
+    n_pre, n_post = 48, 40
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    pre_s = jax.random.bernoulli(k1, 0.4, (n_pre,)).astype(jnp.float32)
+    post_s = jax.random.bernoulli(k2, 0.4, (n_post,)).astype(jnp.float32)
+    pre_t = jax.random.randint(k3, (n_pre,), 0, depth + 1).astype(jnp.uint8)
+    post_t = jax.random.randint(k4, (n_post,), 0, depth + 1).astype(jnp.uint8)
+    p = STDPParams()
+    kw = dict(depth=depth, window=window)
+    ref = counter_synapse_delta(pre_s, post_s, pre_t, post_t, p, use_kernel=False, **kw)
+    fused = counter_synapse_delta(pre_s, post_s, pre_t, post_t, p, interpret=True, **kw)
+    _assert_window_close(window, np.asarray(fused), np.asarray(ref))
+
+
+@pytest.mark.parametrize("window", COUNTER_RULES)
+@pytest.mark.parametrize("m,kk,cc", [(48, 18, 12), (130, 50, 24)])
+def test_conv_counter_kernel_matches_reference(key, window, m, kk, cc):
+    depth = 7
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    pre = jax.random.bernoulli(k1, 0.3, (m, kk)).astype(jnp.float32)
+    post = jax.random.bernoulli(k2, 0.3, (m, cc)).astype(jnp.float32)
+    pre_t = jax.random.randint(k3, (m, kk), 0, depth + 1).astype(jnp.uint8)
+    post_t = jax.random.randint(k4, (m, cc), 0, depth + 1).astype(jnp.uint8)
+    p = STDPParams()
+    kw = dict(depth=depth, window=window)
+    ref = conv_counter_synapse_delta(pre, post, pre_t, post_t, p, use_kernel=False, **kw)
+    fused = conv_counter_synapse_delta(pre, post, pre_t, post_t, p, interpret=True, **kw)
+    # the matmul contraction order may differ from the einsum reference
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_counter_ops_reject_oversized_depth(key):
+    with pytest.raises(ValueError, match="uint8"):
+        counter_weight_update(
+            jnp.zeros((4, 4)),
+            jnp.zeros(4),
+            jnp.zeros(4),
+            jnp.zeros(4, jnp.uint8),
+            jnp.zeros(4, jnp.uint8),
+            STDPParams(),
+            depth=300,
+            window="exact",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Engine-scan level: EngineConfig(rule=..., backend="fused_interpret")
+# ---------------------------------------------------------------------------
+
+
+def _run_engine_pair(key, cfg_ref, t_steps=T_STEPS):
+    cfg_fused = dataclasses.replace(cfg_ref, backend="fused_interpret")
+    state = init_engine(key, cfg_ref)
+    train = jax.random.bernoulli(key, 0.35, (t_steps, cfg_ref.n_pre))
+    s_ref, post_ref = run_engine(state, train, cfg_ref)
+    s_fused, post_fused = run_engine(state, train, cfg_fused)
+    return s_ref, post_ref, s_fused, post_fused
+
+
+@pytest.mark.parametrize("rule", COUNTER_RULES)
+@pytest.mark.parametrize("n_pre,n_post", [(32, 24), (130, 70)])
+def test_counter_engine_fused_matches_reference(key, rule, n_pre, n_post):
+    cfg = EngineConfig(n_pre=n_pre, n_post=n_post, eta=0.25, rule=rule)
+    s_ref, post_ref, s_fused, post_fused = _run_engine_pair(key, cfg)
+    _assert_window_close(rule, np.asarray(s_fused.w), np.asarray(s_ref.w))
+    np.testing.assert_array_equal(np.asarray(post_fused), np.asarray(post_ref))
+
+
+@pytest.mark.parametrize("rule", COUNTER_RULES)
+def test_counter_engine_fused_quantised(key, rule):
+    cfg = EngineConfig(n_pre=48, n_post=40, eta=0.5, rule=rule, quantise=True)
+    s_ref, post_ref, s_fused, post_fused = _run_engine_pair(key, cfg)
+    _assert_window_close(rule, np.asarray(s_fused.w), np.asarray(s_ref.w))
+    np.testing.assert_array_equal(np.asarray(post_fused), np.asarray(post_ref))
+
+
+def test_fused_exact_matches_fused_itp_trajectory(key):
+    """eq. 18 on the kernel path: the fused counter 'exact' kernel and the
+    fused compensated ITP kernel produce the same engine trajectory — the
+    paper's equivalence claim, now kernel-vs-kernel."""
+    kw = dict(n_pre=20, n_post=12, eta=0.25, backend="fused_interpret")
+    cfg_itp = EngineConfig(rule="itp", **kw)
+    cfg_exact = EngineConfig(rule="exact", **kw)
+    train = jax.random.bernoulli(key, 0.35, (T_STEPS, 20))
+    s_itp, post_itp = run_engine(init_engine(key, cfg_itp), train, cfg_itp)
+    s_ex, post_ex = run_engine(init_engine(key, cfg_exact), train, cfg_exact)
+    np.testing.assert_allclose(np.asarray(s_ex.w), np.asarray(s_itp.w), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(post_ex), np.asarray(post_itp))
+
+
+# ---------------------------------------------------------------------------
+# Network-trajectory level: fc + conv nets on the fused counter kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule", COUNTER_RULES)
+def test_snn_fc_counter_fused_matches_reference(key, rule):
+    cfg_ref = snn.mnist_2layer(rule, n_hidden=24)
+    cfg_fused = dataclasses.replace(cfg_ref, backend="fused_interpret")
+    batch, t = 4, 10
+    state = snn.init_snn(key, cfg_ref, batch)
+    raster = jax.random.bernoulli(key, 0.2, (t, batch, 28 * 28))
+    s_ref, counts_ref = snn.run_snn(state, raster, cfg_ref, train=True)
+    s_fused, counts_fused = snn.run_snn(state, raster, cfg_fused, train=True)
+    np.testing.assert_allclose(
+        np.asarray(s_fused.weights[0]), np.asarray(s_ref.weights[0]), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_array_equal(np.asarray(counts_fused), np.asarray(counts_ref))
+
+
+@pytest.mark.parametrize(
+    "net,rule",
+    [
+        ("5layer-csnn", "exact"),
+        ("5layer-csnn", "linear"),
+        ("6layer-dcsnn", "imstdp"),
+    ],
+)
+def test_snn_conv_counter_fused_matches_reference(key, net, rule):
+    """DCSNN/CSNN trajectories: the fused conv counter kernel tracks the
+    patch-level reference over a multi-step run, spike-for-spike."""
+    makers = {
+        "5layer-csnn": lambda r, **kw: snn.fault_csnn(r, length=128, **kw),
+        "6layer-dcsnn": lambda r, **kw: snn.fmnist_dcsnn(r, **kw),
+    }
+    n_in = {"5layer-csnn": 128 * 2, "6layer-dcsnn": 28 * 28}[net]
+    batch, t = 2, 8
+    cfg_ref = makers[net](rule)
+    cfg_fused = dataclasses.replace(cfg_ref, backend="fused_interpret")
+    state = snn.init_snn(key, cfg_ref, batch)
+    raster = jax.random.bernoulli(key, 0.25, (t, batch, n_in))
+    s_ref, counts_ref = snn.run_snn(state, raster, cfg_ref, train=True)
+    s_fused, counts_fused = snn.run_snn(state, raster, cfg_fused, train=True)
+    for w_f, w_r in zip(s_fused.weights, s_ref.weights):
+        np.testing.assert_allclose(np.asarray(w_f), np.asarray(w_r), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(counts_fused), np.asarray(counts_ref))
+
+
+def test_launcher_engine_mode_runs_fused_counter_rule():
+    """--engine --rule exact --backend fused_interpret end-to-end."""
+    import argparse
+
+    from repro.launch.train import run_engine_training
+
+    args = argparse.Namespace(
+        rule="exact",
+        backend="fused_interpret",
+        engine_pre=32,
+        engine_post=32,
+        replicas=2,
+        steps=8,
+        engine_rate=0.3,
+    )
+    summary = run_engine_training(args)
+    assert summary["rule"] == "exact"
+    assert summary["backend"] == "fused_interpret"
+    assert summary["sops_per_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Property tests: counter word ↔ in-register Δt formation round-trip
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data(), depth=st.integers(1, 8), n=st.integers(1, 9))
+def test_counter_word_round_trips_through_delay_formation(data, depth, n):
+    """For every depth 1..8: a counter value (including the saturated
+    ``depth``) survives the uint8 word readout and the kernel's
+    in-register Δt formation, and the validity gate opens exactly for the
+    live delays 0..depth-1."""
+    ts = data.draw(st.lists(st.integers(0, depth), min_size=n, max_size=n))
+    state = jnp.asarray(ts, jnp.int32)
+    words = get_rule("exact").readout_packed(state)
+    assert words.dtype == jnp.uint8
+    dt, valid = counter_delays(words, depth)
+    np.testing.assert_array_equal(np.asarray(dt), np.asarray(ts))
+    np.testing.assert_array_equal(
+        np.asarray(valid), (np.asarray(ts) <= depth - 1).astype(np.float32)
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data(), depth=st.integers(1, 8), steps=st.integers(0, 12))
+def test_counter_state_saturates_and_round_trips_under_stepping(data, depth, steps):
+    """Driving the rule's own step function (reset on spike, saturate at
+    ``depth``) never leaves the representable word range, and the word
+    readout stays the identity on the counter state."""
+    rule = get_rule("exact")
+    n = 4
+    state = rule.init_state(n, depth)
+    for _ in range(steps):
+        spikes = jnp.asarray(data.draw(st.lists(st.integers(0, 1), min_size=n, max_size=n)))
+        state = rule.step(state, spikes, depth=depth)
+    assert int(jnp.max(state)) <= depth
+    dt, valid = counter_delays(rule.readout_packed(state), depth)
+    np.testing.assert_array_equal(np.asarray(dt), np.asarray(state))

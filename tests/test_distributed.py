@@ -262,6 +262,11 @@ def test_dp_profile_batch_axes():
     ("reference", "exact"),
     ("fused_interpret", "itp"),
     ("fused_interpret", "itp_nocomp"),
+    # counter rules on the fused path: the (n,) uint8 counter word crosses
+    # shard_map exactly like the packed history words (axis-0 sharded)
+    ("fused_interpret", "exact"),
+    ("fused_interpret", "linear"),
+    ("fused_interpret", "imstdp"),
 ])
 def test_sharded_engine_parity_single_device(key, backend, rule):
     from repro.core.engine import EngineConfig, init_engine, run_engine

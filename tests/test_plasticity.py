@@ -34,9 +34,11 @@ T_STEPS = 40
 def test_registry_contents():
     names = plasticity.rule_names()
     assert set(names) >= {"itp", "itp_nocomp", "exact", "linear", "imstdp"}
-    assert set(plasticity.kernel_rule_names()) == {"itp", "itp_nocomp"}
+    # every registered rule is kernel-backed since the itp_counter package
+    # closed the counter side of the rule × backend matrix (PR 5)
+    assert set(plasticity.kernel_rule_names()) == set(names)
     assert plasticity.get_rule("itp").has_kernel
-    assert not plasticity.get_rule("exact").has_kernel
+    assert plasticity.get_rule("exact").has_kernel
 
 
 def test_unknown_rule_lists_options():
@@ -55,11 +57,23 @@ def test_unknown_backend_lists_options():
 
 @pytest.mark.parametrize("backend", ["fused", "fused_interpret"])
 @pytest.mark.parametrize("rule", ["exact", "linear", "imstdp"])
-def test_kernel_less_rule_rejects_fused(rule, backend):
+def test_counter_rule_fused_cells_construct(rule, backend):
+    """The former ValueError cells of the rule × backend matrix are open:
+    counter rules are kernel-backed (repro.kernels.itp_counter)."""
+    assert EngineConfig(rule=rule, backend=backend).backend == backend
+    assert snn.mnist_2layer(rule, n_hidden=8, backend=backend).rule == rule
+
+
+def test_kernel_less_rule_rejects_fused():
+    """A rule without a kernel still fails fast on the fused* backends with
+    the actionable alternatives (the config-construction-time contract)."""
+    class NoKernelRule(plasticity.CounterRule):
+        pass
+
+    rule = NoKernelRule(name="nokernel", has_kernel=False)
     with pytest.raises(ValueError, match="no fused kernel.*reference"):
-        EngineConfig(rule=rule, backend=backend)
-    with pytest.raises(ValueError, match="no fused kernel.*reference"):
-        snn.mnist_2layer(rule, n_hidden=8, backend=backend)
+        plasticity.resolve_rule_backend(rule, "fused_interpret")
+    assert plasticity.resolve_rule_backend(rule, "reference") == (False, False)
 
 
 def test_counter_rule_rejects_all_to_all():
@@ -99,8 +113,9 @@ def test_history_rule_last_spikes_reads_newest_bit_without_relayout(key):
 
 
 def test_history_rule_packed_readout_matches_pack_words(key):
-    """readout_packed is the registry view of pack_words; counter rules
-    reject it (no packed state layout → the fused datapaths stay closed)."""
+    """readout_packed is the registry view of pack_words for the history
+    rules; for the counter rules it is the saturating counter itself as a
+    uint8 word — the same shape/sharding contract either way."""
     rule = plasticity.get_rule("itp")
     state = rule.init_state(9, 7)
     for t in range(5):
@@ -108,8 +123,13 @@ def test_history_rule_packed_readout_matches_pack_words(key):
             jax.random.fold_in(key, t), 0.5, (9,)), depth=7)
     np.testing.assert_array_equal(np.asarray(rule.readout_packed(state)),
                                   np.asarray(H.pack_words(state)))
-    with pytest.raises(NotImplementedError, match="packed"):
-        plasticity.get_rule("exact").readout_packed(jnp.zeros(4, jnp.int32))
+    exact = plasticity.get_rule("exact")
+    cstate = exact.init_state(4, 7)
+    cstate = exact.step(cstate, jnp.array([1, 0, 0, 1]), depth=7)
+    words = exact.readout_packed(cstate)
+    assert words.dtype == jnp.uint8 and words.shape == (4,)
+    np.testing.assert_array_equal(np.asarray(words),
+                                  np.asarray(cstate, np.uint8))
 
 
 # ---------------------------------------------------------------------------
