@@ -13,6 +13,8 @@ it exercises):
     rule_cost         — per-rule engine throughput, reference + fused
                         (ITP vs the fused counter kernels & co.)
     conv_cost         — im2col-fused conv update: reference vs Pallas grid
+    sparse_cost       — event-driven sparse backend: speedup vs spike
+                        density + sparse/dense crossover
     roofline          — §Roofline terms from the dry-run artifacts
 
 ``--only <name>`` runs a single module; ``--quick`` shrinks the
@@ -78,6 +80,18 @@ def _run_conv_cost(args):
     return {"fused_speedups": [c["fused_speedup"] for c in r["grid"]]}
 
 
+def _run_sparse_cost(args):
+    from benchmarks import sparse_cost
+    if args.quick:
+        r = sparse_cost.run(args.out, n=64, t_steps=25,
+                            densities=sparse_cost.QUICK_DENSITIES, quick=True)
+    else:
+        r = sparse_cost.run(args.out)
+    return {"model_speedups": [c["model_speedup"] for c in r["grid"]],
+            "measured_speedups": [c["measured_speedup"] for c in r["grid"]],
+            "crossover_density_model": r["crossover_density_model"]}
+
+
 def _run_roofline(args):
     from benchmarks import roofline
     r = roofline.run(args.out)
@@ -94,6 +108,7 @@ MODULES = {
     "engine_cost": _run_engine_cost,
     "rule_cost": _run_rule_cost,
     "conv_cost": _run_conv_cost,
+    "sparse_cost": _run_sparse_cost,
     "roofline": _run_roofline,
 }
 

@@ -11,14 +11,16 @@ conv kernel, the fc layers the dense engine kernel).
 Run:  PYTHONPATH=src python examples/train_snn.py \
           [--net 2layer-snn|6layer-dcsnn|5layer-csnn] \
           [--rule itp|itp_nocomp|exact|linear|imstdp] \
-          [--backend reference|fused|fused_interpret]
+          [--backend reference|fused|fused_interpret|sparse]
       (--steps 300 ≈ 300 simulation steps = 10 batches × 30-step rasters)
 
 ``--rule`` selects the learning rule from the ``repro.plasticity``
 registry — the paper's Table II comparison axis.  Every rule runs on
-every backend: the counter rules (exact/linear/imstdp) ride the fused
-explicit-Δt kernels of ``repro.kernels.itp_counter`` on the fused*
-backends, so the rule comparison is kernel-vs-kernel.
+every fused* backend: the counter rules (exact/linear/imstdp) ride the
+fused explicit-Δt kernels of ``repro.kernels.itp_counter``, so the rule
+comparison is kernel-vs-kernel.  ``--backend sparse`` selects the
+event-driven datapath for the history rules (``--max-events`` caps the
+static event-list length per side).
 """
 import argparse
 import time
@@ -50,9 +52,13 @@ def main():
                     help="learning rule (paper Table II axis); every rule "
                          "runs on every --backend")
     ap.add_argument("--backend", default="reference", choices=BACKENDS,
-                    help="weight-update datapath: pure-jnp reference or the "
+                    help="weight-update datapath: pure-jnp reference, the "
                          "fused Pallas kernels (interpret mode runs them on "
-                         "CPU); applies to fc and conv layers alike")
+                         "CPU), or the event-driven sparse path; applies to "
+                         "fc and conv layers alike")
+    ap.add_argument("--max-events", type=int, default=None,
+                    help="sparse backend: static event-list cap per side "
+                         "(default: uncapped)")
     ap.add_argument("--steps", type=int, default=300,
                     help="total simulation steps of STDP training")
     ap.add_argument("--t-raster", type=int, default=30)
@@ -63,7 +69,8 @@ def main():
 
     maker = snn.PAPER_NETWORKS[args.net]
     kw = {"n_hidden": args.hidden} if args.net == "2layer-snn" else {}
-    cfg = maker(args.rule, backend=args.backend, **kw)
+    cfg = maker(args.rule, backend=args.backend,
+                max_events=args.max_events, **kw)
     sampler, n_classes = SAMPLERS[args.net]
     key = jax.random.PRNGKey(0)
     state = snn.init_snn(key, cfg, args.batch)

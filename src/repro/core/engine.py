@@ -48,6 +48,12 @@ class EngineConfig:
     quantise: bool = False               # round weights to the 8-bit grid
     rule: str = "itp"                    # plasticity.rule_names()
     backend: str = "reference"           # reference | fused | fused_interpret
+                                         # | sparse (event-driven)
+    max_events: int | None = None        # sparse backend: static event-list
+                                         # cap per side (None = population
+                                         # size; excess events beyond the
+                                         # cap are deterministically the
+                                         # highest-indexed and are dropped)
     packed_history: bool = True          # fused* datapaths read packed uint8
                                          # register words (the paper's 8-bit
                                          # register file); False keeps the
@@ -66,6 +72,10 @@ class EngineConfig:
         rule = plasticity.get_rule(self.rule)
         plasticity.resolve_rule_backend(rule, self.backend)
         rule.check_pairing(self.pairing)
+        if self.max_events is not None and self.max_events < 1:
+            raise ValueError(
+                f"max_events must be a positive event-list cap or None "
+                f"(uncapped), got {self.max_events}")
 
     def learning_rule(self) -> plasticity.LearningRule:
         return plasticity.get_rule(self.rule)
@@ -156,6 +166,26 @@ def engine_step(state: EngineState, pre_spikes: jax.Array,
             cfg.stdp, depth=cfg.depth, pairing=cfg.pairing,
             compensate=compensate, eta=cfg.eta, w_min=cfg.w_min,
             w_max=cfg.w_max, interpret=interpret)
+    elif cfg.backend == "sparse":
+        # event-driven datapath: static-shape event lists (capped at
+        # cfg.max_events) gate gather/scatter updates of only the touched
+        # weight slices, reading the same packed uint8 register words the
+        # fused path stores; a silent step (no pre or post event at all)
+        # skips the update outright via lax.cond — the dense update is
+        # identically zero there (the XOR pair gate needs a spike)
+        packed = cfg.use_packed_history()
+        pre_read = rule.kernel_readout(state.pre_hist, packed=packed)
+        post_read = rule.kernel_readout(state.post_hist, packed=packed)
+
+        def _sparse_update(w):
+            return rule.sparse_update_from_readout(
+                w, pre_spikes, post_spikes, pre_read, post_read,
+                cfg.stdp, depth=cfg.depth, pairing=cfg.pairing,
+                compensate=compensate, eta=cfg.eta, w_min=cfg.w_min,
+                w_max=cfg.w_max, max_events=cfg.max_events)
+
+        any_event = jnp.any(pre_spikes != 0) | jnp.any(post_spikes)
+        w = jax.lax.cond(any_event, _sparse_update, lambda w: w, state.w)
     else:
         dw = rule.delta(state.pre_hist, state.post_hist,
                         pre_spikes, post_spikes, cfg.stdp, depth=cfg.depth,

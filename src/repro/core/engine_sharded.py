@@ -27,17 +27,8 @@ from repro import plasticity
 from repro.core.engine import EngineConfig, EngineState, _quantise
 from repro.core.lif import LIFState, lif_step
 from repro.core.stdp import pair_gate
-
-
-def _shard_map(f, *, mesh, in_specs, out_specs):
-    """Version-compat shard_map: new ``jax.shard_map`` (check_vma) or the
-    ``jax.experimental.shard_map`` API (check_rep) on older releases."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map as _sm
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False)
+from repro.distributed.sharding import shard_map_compat
+from repro.kernels.itp_sparse.events import event_cap, spike_events
 
 
 def shard_engine_state(state: EngineState, mesh: Mesh,
@@ -67,18 +58,28 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
     pre_ax, post_ax = axes
     rule = cfg.learning_rule()
     use_kernel, interpret = plasticity.resolve_rule_backend(rule, cfg.backend)
+    sparse = cfg.backend == "sparse"
     compensate = cfg.effective_compensate()
-    # fused datapaths default to the per-neuron word storage format: the
-    # readout crossing shard_map is one uint8 word per neuron ((n,),
-    # sharded along axis 0) — the packed register word for the history
-    # rules (4·depth× less replicated history traffic than (depth, n)
-    # float32; depth > 8 exceeds the word width and keeps the unpacked
-    # operands, see EngineConfig.use_packed_history) and the saturating
-    # last-spike counter for the counter rules (their only kernel layout).
+    # fused and sparse datapaths default to the per-neuron word storage
+    # format: the readout crossing shard_map is one uint8 word per neuron
+    # ((n,), sharded along axis 0) — the packed register word for the
+    # history rules (4·depth× less replicated history traffic than
+    # (depth, n) float32; depth > 8 exceeds the word width and keeps the
+    # unpacked operands, see EngineConfig.use_packed_history) and the
+    # saturating last-spike counter for the counter rules (their only
+    # kernel layout).
     packed = cfg.use_packed_history()
-    words = use_kernel and rule.kernel_readout_axes(packed=packed) == 1
+    words = (use_kernel or sparse) and rule.kernel_readout_axes(packed=packed) == 1
+    # sparse: the global presynaptic event list is extracted ONCE outside
+    # shard_map (pre spikes are replicated inputs) and crosses as a
+    # replicated static-shape (cap,) index vector; each tile translates
+    # the global indices into its own row range.  Postsynaptic events are
+    # extracted locally per tile — post spikes are computed redundantly on
+    # every device of a post-column anyway, so the local extraction adds
+    # no communication.
+    n_events = event_cap(cfg.n_pre, cfg.max_events) if sparse else 0
 
-    def local_step(w, pre_spikes, pre_read, post_read, v):
+    def local_step(w, pre_spikes, pre_read, post_read, v, pre_ev):
         # w: local (pre_tile, post_tile); spikes and per-neuron readout
         # views shard along their own axes (pre over pre_ax, post over
         # post_ax).  The readout rows are rule-specific — depth bitplane
@@ -95,6 +96,20 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
                 depth=cfg.depth, pairing=cfg.pairing, compensate=compensate,
                 eta=cfg.eta, w_min=cfg.w_min, w_max=cfg.w_max,
                 interpret=interpret)
+        elif sparse:
+            # translate the replicated global pre-event indices into this
+            # tile's row range; out-of-tile events map to the out-of-range
+            # sentinel ``tile`` so the mode="drop" scatters ignore them
+            # (negative indices would wrap, hence the explicit remap)
+            tile = w.shape[0]
+            start = jax.lax.axis_index(pre_ax) * tile
+            local = pre_ev - start
+            local = jnp.where((local >= 0) & (local < tile), local, tile)
+            w = rule.sparse_update_from_readout(
+                w, pre_spikes, post_spikes, pre_read, post_read, cfg.stdp,
+                depth=cfg.depth, pairing=cfg.pairing, compensate=compensate,
+                eta=cfg.eta, w_min=cfg.w_min, w_max=cfg.w_max,
+                max_events=cfg.max_events, pre_events=local)
         else:
             ltp = rule.magnitudes_from_readout(
                 pre_read, cfg.stdp.a_plus, cfg.stdp.tau_plus,
@@ -114,28 +129,34 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
     # (rows, n) with the neuron axis second
     pre_read_spec = P(pre_ax) if words else P(None, pre_ax)
     post_read_spec = P(post_ax) if words else P(None, post_ax)
-    sharded = _shard_map(
+    sharded = shard_map_compat(
         local_step, mesh=mesh,
         in_specs=(P(pre_ax, post_ax),      # w tile
                   P(pre_ax),               # pre spikes (sharded like rows)
                   pre_read_spec,           # pre history readout
                   post_read_spec,          # post history readout
-                  P(post_ax)),             # membrane (sharded like cols)
+                  P(post_ax),              # membrane (sharded like cols)
+                  P()),                    # global pre events (replicated)
         out_specs=(P(pre_ax, post_ax), P(post_ax), P(post_ax)))
 
     @jax.jit
     def step(state: EngineState, pre_spikes: jax.Array):
-        if use_kernel:
+        if use_kernel or sparse:
             pre_read = rule.kernel_readout(state.pre_hist, packed=packed)
             post_read = rule.kernel_readout(state.post_hist, packed=packed)
         else:
             pre_read = rule.readout(state.pre_hist).astype(jnp.float32)
             post_read = rule.readout(state.post_hist).astype(jnp.float32)
+        if sparse:
+            pre_ev, _ = spike_events(pre_spikes, cfg.max_events)
+        else:
+            pre_ev = jnp.zeros((n_events,), jnp.int32)
         w, post_spikes, v = sharded(state.w,
                                     pre_spikes.astype(jnp.float32),
                                     pre_read,
                                     post_read,
-                                    state.neurons.v)
+                                    state.neurons.v,
+                                    pre_ev)
         post_bool = post_spikes.astype(jnp.bool_)
         new_state = EngineState(
             w=w,

@@ -27,6 +27,28 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 _state = threading.local()
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs, axis_names=None):
+    """Version-compat ``shard_map``: the top-level ``jax.shard_map`` API
+    (``check_vma``/``axis_names``) when this jax has it, else the
+    ``jax.experimental.shard_map`` API (``check_rep``; partial-manual
+    ``axis_names`` translates to its ``auto`` complement).  The single
+    shim every shard_map call site (``repro.core.engine_sharded``, the
+    multi-device subprocess tests) routes through, so the supported-API
+    decision lives in exactly one place.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": False}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {"check_rep": False}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
 def current_mesh() -> Mesh | None:
     return getattr(_state, "mesh", None)
 

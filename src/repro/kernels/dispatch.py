@@ -9,10 +9,17 @@ launcher, benchmarks):
   * ``fused``           — Pallas kernel compiled for the accelerator
   * ``fused_interpret`` — the same kernel via the interpreter (CPU
                           validation; jitted, so still fast)
+  * ``sparse``          — event-driven datapath (``repro.kernels.
+                          itp_sparse``): static-shape event lists gate
+                          gather/scatter updates of only the touched
+                          weight slices, instead of the dense n_pre ×
+                          n_post tile the other backends read
 
 :func:`resolve_backend` maps a name to the ``(use_kernel, interpret)``
-pair the per-package ``ops.py`` wrappers take.  The lane/tile padding
-helpers live here too so each kernel package stops re-deriving them.
+pair the per-package ``ops.py`` wrappers take; ``sparse`` is *not* a
+Pallas path, so it maps to ``(False, False)`` and consumers branch on
+the backend name explicitly.  The lane/tile padding helpers live here
+too so each kernel package stops re-deriving them.
 """
 from __future__ import annotations
 
@@ -22,13 +29,15 @@ import jax.numpy as jnp
 LANE = 128
 SUBLANE = 8
 
-BACKENDS = ("reference", "fused", "fused_interpret")
+BACKENDS = ("reference", "fused", "fused_interpret", "sparse")
 
 
 def resolve_backend(backend: str) -> tuple[bool, bool]:
     """Map a backend name to the ``(use_kernel, interpret)`` pair."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+    if backend == "sparse":
+        return False, False
     return backend != "reference", backend == "fused_interpret"
 
 

@@ -1,0 +1,17 @@
+"""Event-driven sparse weight-update datapath (``backend="sparse"``).
+
+Static-shape spike-event lists (``events``) gate gather/scatter updates
+of only the touched weight slices (``ops``) — the event-queue view of
+the paper's premise that a dense STDP datapath wastes >= 95 % of its
+work at realistic spike densities.  Not a Pallas package: the datapath
+is pure jnp, selected per config via ``BACKENDS`` in
+``repro.kernels.dispatch`` and routed through the rule-owned sparse
+hooks in ``repro.plasticity``.
+"""
+
+from repro.kernels.itp_sparse.events import event_cap, spike_events, word_events
+from repro.kernels.itp_sparse.ops import (
+    sparse_conv_delta,
+    sparse_synapse_delta,
+    sparse_weight_update,
+)

@@ -1,0 +1,75 @@
+"""Static-shape spike-event extraction for the event-driven backend.
+
+The whole sparse datapath hinges on one primitive: turn a {0,1} activity
+vector (or a bit slot of the packed uint8 history words) into a
+**jit-stable** index list.  ``jnp.where`` with a static ``size`` gives
+exactly the semantics the hardware event queue would: the first
+``max_events`` active indices in ascending neuron order, padded with the
+out-of-range sentinel ``n`` — so downstream gathers (``mode="fill"``)
+read zeros and scatters (``mode="drop"``) skip the padding without any
+dynamic shapes.  Saturation is deterministic: events beyond the cap are
+the *highest-indexed* ones and are dropped (pinned by
+tests/test_sparse_events.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def event_cap(n: int, max_events: int | None) -> int:
+    """The static event-list length for a population of ``n`` neurons.
+
+    ``None`` means uncapped (every neuron could fire: cap = n); a cap
+    larger than ``n`` is clamped — the list never needs more slots than
+    neurons.
+    """
+    if max_events is None:
+        return n
+    if max_events < 1:
+        raise ValueError(f"max_events must be >= 1, got {max_events}")
+    return min(int(max_events), n)
+
+
+def spike_events(
+    spikes: jax.Array, max_events: int | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Event list of a ``(n,)`` {0,1} spike vector.
+
+    Returns ``(idx, count)``: ``idx`` is int32 ``(E,)`` with
+    ``E = event_cap(n, max_events)`` — the first ``E`` active indices in
+    ascending order, padded with the sentinel ``n`` — and ``count`` the
+    number of valid (non-padding) entries, saturating at ``E``.
+    """
+    spikes = jnp.asarray(spikes)
+    n = spikes.shape[-1]
+    cap = event_cap(n, max_events)
+    (idx,) = jnp.where(spikes != 0, size=cap, fill_value=n)
+    idx = idx.astype(jnp.int32)
+    count = jnp.minimum(jnp.sum(spikes != 0), cap).astype(jnp.int32)
+    return idx, count
+
+
+def word_events(
+    words: jax.Array,
+    depth: int,
+    max_events: int | None = None,
+    *,
+    slot: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """Event list of one register slot of packed uint8 history words.
+
+    ``words`` is the ``(n,)`` uint8 register file
+    (``repro.core.history.pack_words``: MSB = most recent, depth <= 8);
+    ``slot`` selects the register position k (0 = most recent step), i.e.
+    word bit ``7 - slot``.  Returns the same ``(idx, count)`` contract as
+    :func:`spike_events` for the neurons whose slot-k bit is set.
+    """
+    if not 0 <= slot < depth:
+        raise ValueError(f"slot must be in [0, {depth}), got {slot}")
+    if depth > 8:
+        raise ValueError("word_events reads packed words (depth <= 8)")
+    words = jnp.asarray(words, jnp.uint8)
+    bit = (words >> jnp.uint8(7 - slot)) & jnp.uint8(1)
+    return spike_events(bit, max_events)

@@ -1,0 +1,152 @@
+"""Event-driven weight updates: gather/scatter-RMW on the touched slices.
+
+The dense backends read every (pre, post) pair per step and XOR-gate
+>= 95 % of them to zero at realistic 1-5 % spike densities; these ops
+touch only the slices adjacent to actual events:
+
+  * LTP writes the **columns** of postsynaptic neurons that fired
+    (``post`` events), adding the per-row magnitude ``(1-pre)·ltp``;
+  * LTD writes the **rows** of presynaptic neurons that fired (``pre``
+    events), subtracting the per-column magnitude ``(1-post)·ltd``.
+
+Because the XOR pair gate makes the two touched sets interact only on
+(pre-event x post-event) cells — where both masked magnitudes are
+exactly zero — the scatter sequence is *exactly* the dense
+``clip(w + eta·dw)`` whenever ``w`` already lies in ``[w_min, w_max]``
+(the engine invariant: inits and every update are clipped).  Parity is
+pinned at ops, engine-scan and network level in
+tests/test_sparse_backend.py.
+
+Event lists come from :mod:`repro.kernels.itp_sparse.events`: static
+shape ``E = event_cap(n, max_events)``, ascending indices, padded with
+the out-of-range sentinel ``n`` so gathers read zeros (``mode="fill"``)
+and scatters drop the padding (``mode="drop"``).  With ``max_events``
+below the live event count the *highest-indexed* events are dropped —
+deterministic saturation, pinned against the truncated dense formula.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.itp_sparse.events import spike_events
+
+
+def sparse_weight_update(
+    w: jax.Array,
+    pre_spike: jax.Array,
+    post_spike: jax.Array,
+    ltp_mag: jax.Array,
+    ltd_mag: jax.Array,
+    *,
+    eta: float = 1.0,
+    w_min: float = 0.0,
+    w_max: float = 1.0,
+    max_events: int | None = None,
+    pre_events: jax.Array | None = None,
+    post_events: jax.Array | None = None,
+) -> jax.Array:
+    """Clipped event-driven RMW of the dense ``(n_pre, n_post)`` matrix.
+
+    ``ltp_mag``/``ltd_mag`` are the per-neuron magnitudes the rule read
+    from its timing state (``(n_pre,)`` / ``(n_post,)``).  Callers may
+    pass precomputed event lists (the sharded engine ships global pre
+    events across shard_map and translates them to tile-local indices);
+    out-of-tile entries must already be remapped to an out-of-range
+    sentinel so the scatter drops them.
+    """
+    pre = jnp.asarray(pre_spike, jnp.float32)
+    post = jnp.asarray(post_spike, jnp.float32)
+    if pre_events is None:
+        pre_events, _ = spike_events(pre, max_events)
+    if post_events is None:
+        post_events, _ = spike_events(post, max_events)
+
+    # LTP: post fired alone -> potentiate its column from the pre readout
+    ltp_row = (1.0 - pre) * ltp_mag                       # (n_pre,)
+    cols = jnp.take(w, post_events, axis=1, mode="fill", fill_value=0.0)
+    cols = jnp.clip(cols + eta * ltp_row[:, None], w_min, w_max)
+    w = w.at[:, post_events].set(cols, mode="drop")
+
+    # LTD: pre fired alone -> depress its row from the post readout
+    ltd_col = (1.0 - post) * ltd_mag                      # (n_post,)
+    rows = jnp.take(w, pre_events, axis=0, mode="fill", fill_value=0.0)
+    rows = jnp.clip(rows - eta * ltd_col[None, :], w_min, w_max)
+    return w.at[pre_events, :].set(rows, mode="drop")
+
+
+def sparse_synapse_delta(
+    pre_spike: jax.Array,
+    post_spike: jax.Array,
+    ltp_mag: jax.Array,
+    ltd_mag: jax.Array,
+    *,
+    max_events: int | None = None,
+) -> jax.Array:
+    """Raw event-driven ``(n_pre, n_post)`` Δw (no eta/clip).
+
+    The batched SNN fc layers vmap this over samples and accumulate —
+    the sparse twin of the rules' ``fused_delta_from_readout``.  Built by
+    scattering the two event slices into zeros: LTP columns are *set*
+    (disjoint from everything but pre-event rows, where the masked
+    magnitude is zero), LTD rows are *added* (so the overlap stays
+    exact).
+    """
+    pre = jnp.asarray(pre_spike, jnp.float32)
+    post = jnp.asarray(post_spike, jnp.float32)
+    pre_events, _ = spike_events(pre, max_events)
+    post_events, _ = spike_events(post, max_events)
+    n_pre, n_post = pre.shape[0], post.shape[0]
+
+    dw = jnp.zeros((n_pre, n_post), jnp.float32)
+    ltp_row = (1.0 - pre) * ltp_mag
+    dw = dw.at[:, post_events].set(
+        jnp.broadcast_to(ltp_row[:, None], (n_pre, post_events.shape[0])),
+        mode="drop",
+    )
+    ltd_col = (1.0 - post) * ltd_mag
+    return dw.at[pre_events, :].add(
+        jnp.broadcast_to(-ltd_col[None, :], (pre_events.shape[0], n_post)),
+        mode="drop",
+    )
+
+
+def sparse_conv_delta(
+    pre_patches: jax.Array,
+    post_spikes: jax.Array,
+    pre_bits: jax.Array,
+    post_bits: jax.Array,
+    po2_ltp: jax.Array,
+    po2_ltd: jax.Array,
+    *,
+    nearest: bool = True,
+    max_events: int | None = None,
+) -> jax.Array:
+    """Event-driven ``(K, C)`` conv delta: im2col on gathered rows only.
+
+    A patch row contributes iff it carries *current-step* activity on
+    either side (LTP needs a post spike in the row, LTD a pre spike —
+    history bits alone contribute nothing through the pair gate), so the
+    active-row event list gathers only those rows of the im2col operands
+    and the oracle runs on the ``(E, ·)`` subset.  Padding rows gather as
+    all-zero and contribute exactly zero, so the result equals the dense
+    ``itp_stdp_conv_delta_ref`` whenever every active row fits the cap.
+    """
+    from repro.kernels.itp_stdp_conv.ref import itp_stdp_conv_delta_ref
+
+    pre = jnp.asarray(pre_patches, jnp.float32)           # (M, K)
+    post = jnp.asarray(post_spikes, jnp.float32)          # (M, C)
+    active = jnp.any(pre != 0, axis=1) | jnp.any(post != 0, axis=1)
+    rows, _ = spike_events(active, max_events)            # (E,)
+
+    gather = lambda a, axis: jnp.take(a, rows, axis=axis, mode="fill", fill_value=0)
+    return itp_stdp_conv_delta_ref(
+        gather(pre, 0),
+        gather(post, 0),
+        gather(jnp.asarray(pre_bits, jnp.float32), 1),    # (depth, E, K)
+        gather(jnp.asarray(post_bits, jnp.float32), 1),   # (depth, E, C)
+        po2_ltp,
+        po2_ltd,
+        nearest=nearest,
+    )

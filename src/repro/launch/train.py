@@ -9,9 +9,11 @@ straggler watchdog.  For the paper's own SNN training path use
 ``--engine`` switches to the learning-engine workload: a population of
 engine replicas trained on random rasters with the selectable learning
 rule (``--rule itp|itp_nocomp|exact|linear|imstdp``) and weight-update
-backend (``--backend reference|fused|fused_interpret``), reporting
-synaptic-op throughput — the launcher path for exercising the fused
-Pallas datapath (and the counter-rule baselines) end-to-end.
+backend (``--backend reference|fused|fused_interpret|sparse``),
+reporting synaptic-op throughput — the launcher path for exercising the
+fused Pallas datapath (and the counter-rule baselines) end-to-end.  The
+``sparse`` backend is the event-driven datapath (``--max-events`` caps
+the static event-list length per side).
 
 ``--snn <net>`` switches to the paper's network workloads (2-layer SNN,
 6-layer DCSNN, 5-layer CSNN) on the same selectable rule and backend:
@@ -53,7 +55,8 @@ def run_engine_training(args) -> dict:
 
     rule = getattr(args, "rule", "itp")
     cfg = EngineConfig(n_pre=args.engine_pre, n_post=args.engine_post,
-                       rule=rule, backend=args.backend)
+                       rule=rule, backend=args.backend,
+                       max_events=getattr(args, "max_events", None))
     key = jax.random.PRNGKey(0)
     states = init_engine_population(key, cfg, args.replicas)
     trains = jax.random.bernoulli(
@@ -100,7 +103,9 @@ def run_snn_training(args) -> dict:
     from repro.models import snn
 
     rule = getattr(args, "rule", "itp")
-    cfg = snn.PAPER_NETWORKS[args.snn](rule, backend=args.backend)
+    cfg = snn.PAPER_NETWORKS[args.snn](
+        rule, backend=args.backend,
+        max_events=getattr(args, "max_events", None))
     key = jax.random.PRNGKey(0)
     state = snn.init_snn(key, cfg, args.batch)
     n_in = 1
@@ -163,6 +168,10 @@ def main():
                          "rule runs on every --backend")
     ap.add_argument("--backend", default="reference", choices=BACKENDS,
                     help="weight-update datapath (--engine and --snn modes)")
+    ap.add_argument("--max-events", type=int, default=None,
+                    help="sparse backend: static event-list cap per side "
+                         "(default: uncapped; excess highest-indexed events "
+                         "are dropped)")
     ap.add_argument("--engine-pre", type=int, default=256)
     ap.add_argument("--engine-post", type=int, default=256)
     ap.add_argument("--replicas", type=int, default=8)

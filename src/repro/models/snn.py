@@ -73,6 +73,12 @@ class SNNConfig:
     w_bits: int = 8
     quantise: bool = True
     backend: str = "reference"    # reference | fused | fused_interpret
+                                  # | sparse (event-driven)
+    max_events: int | None = None  # sparse backend: static event-list cap
+                                  # per side and per sample (None = popu-
+                                  # lation size; excess events beyond the
+                                  # cap are deterministically the highest-
+                                  # indexed and are dropped)
     packed_history: bool = True   # fused* datapaths read packed uint8
                                   # register words (one byte per neuron /
                                   # patch element); False keeps the unpacked
@@ -90,6 +96,10 @@ class SNNConfig:
         rule = plasticity.get_rule(self.rule)
         plasticity.resolve_rule_backend(rule, self.backend)
         rule.check_pairing(self.pairing)
+        if self.max_events is not None and self.max_events < 1:
+            raise ValueError(
+                f"max_events must be a positive event-list cap or None "
+                f"(uncapped), got {self.max_events}")
 
     def learning_rule(self) -> plasticity.LearningRule:
         return plasticity.get_rule(self.rule)
@@ -324,6 +334,41 @@ def _fused_fc_delta(cfg: SNNConfig, st: "LayerState", s_in: jax.Array,
     return jax.vmap(one)(pre, post, pre_read, post_read).sum(axis=0)
 
 
+def _sparse_fc_delta(cfg: SNNConfig, st: "LayerState", s_in: jax.Array,
+                     s_out: jax.Array) -> jax.Array:
+    """Batch-summed Δw for an fc layer via the rule's event-driven path.
+
+    Mirrors ``_fused_fc_delta``'s per-sample vmap, but each sample's Δw is
+    built from its static-shape spike-event lists (capped at
+    ``cfg.max_events`` per side): only the event rows/columns are
+    scattered into the Δw matrix, everything else stays exactly zero —
+    the XOR pair gate needs a current spike on one side of the pair.
+    """
+    rule = cfg.learning_rule()
+    B = s_in.shape[0]
+    pre = s_in.reshape(B, -1)                       # (B, fan_in)
+    post = s_out.reshape(B, -1)                     # (B, n_out)
+    pre_read = rule.kernel_readout(st.pre_hist, packed=cfg.use_packed_history())
+    post_read = rule.kernel_readout(st.post_hist, packed=cfg.use_packed_history())
+    if pre_read.ndim == 1:
+        # per-neuron packed register words, stored flat over (B · n)
+        pre_read = pre_read.reshape(B, -1)          # (B, fan_in)
+        post_read = post_read.reshape(B, -1)        # (B, n_out)
+    else:
+        # unpacked oracle datapath: per-sample depth-major bitplane views
+        pre_read = pre_read.reshape(
+            cfg.depth, B, -1).transpose(1, 0, 2)    # (B, depth, fan_in)
+        post_read = post_read.reshape(
+            cfg.depth, B, -1).transpose(1, 0, 2)    # (B, depth, n_out)
+
+    def one(p, q, pr, qr):
+        return rule.sparse_delta_from_readout(
+            p, q, pr, qr, cfg.stdp, depth=cfg.depth, pairing=cfg.pairing,
+            compensate=cfg.compensate, max_events=cfg.max_events)
+
+    return jax.vmap(one)(pre, post, pre_read, post_read).sum(axis=0)
+
+
 def _conv_delta(cfg: SNNConfig, spec: SNNLayerSpec, st: "LayerState",
                 patches: jax.Array, s_out: jax.Array,
                 in_shape: tuple) -> jax.Array:
@@ -364,6 +409,16 @@ def _conv_delta(cfg: SNNConfig, spec: SNNLayerSpec, st: "LayerState",
         pre_read = pre_read.reshape(cfg.depth, -1, pre_read.shape[-1])
         post_read = post_read.astype(jnp.float32).reshape(
             cfg.depth, -1, s_out.shape[-1])
+    if cfg.backend == "sparse":
+        # event-driven patch path: only patch rows with a current pre- or
+        # post-side spike can contribute through the XOR pair gate, so the
+        # rule gathers the (capped) active rows and contracts just those
+        return rule.sparse_conv_delta_from_readout(
+            patches.reshape(-1, patches.shape[-1]),  # (M, K)
+            s_out.reshape(-1, s_out.shape[-1]),      # (M, C)
+            pre_read, post_read, cfg.stdp, depth=cfg.depth,
+            pairing=cfg.pairing, compensate=cfg.compensate,
+            max_events=cfg.max_events)
     return rule.conv_delta_from_readout(
         patches.reshape(-1, patches.shape[-1]),      # (M, K)
         s_out.reshape(-1, s_out.shape[-1]),          # (M, C)
@@ -438,6 +493,14 @@ def _learnable_step(spec: SNNLayerSpec, cfg: SNNConfig, w: jax.Array,
         dw = _conv_delta(cfg, spec, st, patches, s_out,
                          spikes_in.shape[1:])
         denom = float(B * patches.shape[1])
+        w = jnp.clip(w + cfg.eta * dw / denom, 0.0, 1.0)
+        w = _quantise(w, cfg)
+    elif train and cfg.backend == "sparse":
+        # event-driven engine datapath: per-sample Δw scattered from the
+        # static-shape spike-event lists, batch-accumulated, then the
+        # same clip + quantise as the reference
+        dw = _sparse_fc_delta(cfg, st, s_in, s_out)
+        denom = float(B)                               # P = 1 for fc
         w = jnp.clip(w + cfg.eta * dw / denom, 0.0, 1.0)
         w = _quantise(w, cfg)
     elif train and cfg.backend != "reference":

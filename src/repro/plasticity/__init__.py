@@ -10,6 +10,7 @@ from repro.plasticity.base import (
     register_rule,
     resolve_rule_backend,
     rule_names,
+    sparse_rule_names,
 )
 from repro.plasticity.rules import (
     EXACT,

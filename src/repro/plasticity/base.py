@@ -25,10 +25,15 @@ its fused Pallas datapath through the ``kernel_readout`` /
 the ``itp_stdp`` / ``itp_stdp_conv`` kernels, the explicit-Δt counter
 family to the ``itp_counter`` kernels — so the engine, the sharded
 engine, and the SNN layers dispatch through the rule instead of
-hard-wiring one kernel package.  A rule without a kernel is rejected on
-the ``fused*`` backends at config-construction time with the full option
-list (:func:`resolve_rule_backend`), so the rule × backend matrix
-(ROADMAP) is explicit rather than discovered at trace time.
+hard-wiring one kernel package.  Rules that set ``has_sparse=True``
+additionally own the event-driven datapath (``backend="sparse"``,
+``repro.kernels.itp_sparse``) through the ``sparse_update_from_readout``
+/ ``sparse_delta_from_readout`` / ``sparse_conv_delta_from_readout``
+hooks.  A rule without a kernel is rejected on the ``fused*`` backends —
+and one without event hooks on the ``sparse`` backend — at
+config-construction time with the full option list
+(:func:`resolve_rule_backend`), so the rule × backend matrix (ROADMAP)
+is explicit rather than discovered at trace time.
 """
 
 from __future__ import annotations
@@ -46,13 +51,16 @@ class LearningRule(abc.ABC):
     """Protocol every STDP-variant learning rule implements.
 
     ``name`` is the registry key; ``has_kernel`` marks rules whose state
-    layout the fused Pallas kernels consume; ``compensate`` is ``None``
-    when the rule defers to the config's compensation flag (the default
-    'itp' behaviour) or a hard ``True``/``False`` override.
+    layout the fused Pallas kernels consume; ``has_sparse`` marks rules
+    that own the event-driven datapath (``backend="sparse"``);
+    ``compensate`` is ``None`` when the rule defers to the config's
+    compensation flag (the default 'itp' behaviour) or a hard
+    ``True``/``False`` override.
     """
 
     name: str = ""
     has_kernel: bool = False
+    has_sparse: bool = False
     compensate: bool | None = None
 
     # -- state ---------------------------------------------------------
@@ -173,6 +181,79 @@ class LearningRule(abc.ABC):
         """
         raise NotImplementedError(f"rule {self.name!r} has no fused kernel")
 
+    # -- event-driven (sparse) datapath --------------------------------
+    # Rules with ``has_sparse=True`` own the event-driven datapath of
+    # ``repro.kernels.itp_sparse``: static-shape event lists gate
+    # gather/scatter updates of only the touched weight slices.  The
+    # readout views are the same ones :meth:`kernel_readout` produces
+    # (packed uint8 words or dense rows) so the sparse backend shares
+    # the fused backends' storage format and sharding contract.
+
+    def sparse_update_from_readout(
+        self,
+        w: jax.Array,
+        pre_spike: jax.Array,
+        post_spike: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        eta: float = 1.0,
+        w_min: float = 0.0,
+        w_max: float = 1.0,
+        max_events: int | None = None,
+        pre_events: jax.Array | None = None,
+        post_events: jax.Array | None = None,
+    ) -> jax.Array:
+        """Event-driven clipped weight RMW from readout views.
+
+        ``pre_events``/``post_events`` let shard_map callers ship
+        precomputed (tile-translated) event lists; ``None`` extracts
+        them from the current-step spikes under ``max_events``.
+        """
+        raise NotImplementedError(f"rule {self.name!r} has no event-driven datapath")
+
+    def sparse_delta_from_readout(
+        self,
+        pre_spike: jax.Array,
+        post_spike: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        max_events: int | None = None,
+    ) -> jax.Array:
+        """Raw event-driven ``(n_pre, n_post)`` Δw (no eta/clip) — the
+        batched SNN fc layers vmap this over samples and accumulate."""
+        raise NotImplementedError(f"rule {self.name!r} has no event-driven datapath")
+
+    def sparse_conv_delta_from_readout(
+        self,
+        pre_patches: jax.Array,
+        post_spikes: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        max_events: int | None = None,
+    ) -> jax.Array:
+        """Raw ``(K, C)`` conv delta, im2col on gathered active rows only.
+
+        Same operand layout as :meth:`conv_delta_from_readout` with
+        ``use_kernel=False`` (dense bitplane readouts in the im2col
+        patch layout); the active-row event list caps at ``max_events``.
+        """
+        raise NotImplementedError(f"rule {self.name!r} has no event-driven datapath")
+
     @abc.abstractmethod
     def magnitudes_from_readout(
         self,
@@ -278,12 +359,18 @@ def kernel_rule_names() -> tuple[str, ...]:
     return tuple(sorted(n for n, r in RULES.items() if r.has_kernel))
 
 
+def sparse_rule_names() -> tuple[str, ...]:
+    return tuple(sorted(n for n, r in RULES.items() if r.has_sparse))
+
+
 def resolve_rule_backend(rule: str | LearningRule, backend: str) -> tuple[bool, bool]:
     """Validate a (rule, backend) cell and map it to (use_kernel, interpret).
 
     Unknown rule or backend names raise ``ValueError`` listing the valid
-    options; a kernel-less rule on a ``fused*`` backend is rejected with
-    the actionable alternatives (the ROADMAP rule × backend matrix).
+    options; a kernel-less rule on a ``fused*`` backend — or a rule
+    without event hooks on the ``sparse`` backend — is rejected with the
+    actionable alternatives (the ROADMAP rule × backend matrix), never
+    at trace time.
     """
     if isinstance(rule, str):
         rule = get_rule(rule)
@@ -293,6 +380,13 @@ def resolve_rule_backend(rule: str | LearningRule, backend: str) -> tuple[bool, 
             f"rule {rule.name!r} has no fused kernel: backend {backend!r} is "
             f"only available for the kernel-backed rules "
             f"{kernel_rule_names()}; use backend='reference' for "
+            f"{rule.name!r} (valid backends: {BACKENDS})"
+        )
+    if backend == "sparse" and not rule.has_sparse:
+        raise ValueError(
+            f"rule {rule.name!r} has no event-driven datapath: backend "
+            f"'sparse' is only available for the event-hook rules "
+            f"{sparse_rule_names()}; use backend='reference' for "
             f"{rule.name!r} (valid backends: {BACKENDS})"
         )
     return use_kernel, interpret

@@ -51,6 +51,7 @@ class HistoryRule(LearningRule):
 
     name: str = "itp"
     has_kernel: bool = True
+    has_sparse: bool = True
     compensate: bool | None = None  # None: defer to the config flag
 
     def init_state(self, n: int, depth: int) -> H.SpikeHistory:
@@ -181,6 +182,114 @@ class HistoryRule(LearningRule):
                 pre_patches, post_spikes, pre_read, post_read, p, depth=depth, **kw
             )
         return conv_synapse_delta(pre_patches, post_spikes, pre_read, post_read, p, **kw)
+
+    # -- event-driven (sparse) datapath: the itp_sparse package ---------
+
+    def _readout_rows(self, arr: jax.Array, depth: int) -> jax.Array:
+        """Normalise a readout view to (depth, n) registers, k=0 newest.
+
+        Accepts either the packed uint8 word layout ((n,), the format
+        that crosses shard_map) or the dense depth-major rows; unpacking
+        is bit-exact, so both produce identical magnitudes.
+        """
+        if arr.ndim == 1:  # packed uint8 register words
+            return H.unpack_words(arr, depth).T
+        return arr
+
+    def sparse_update_from_readout(
+        self,
+        w: jax.Array,
+        pre_spike: jax.Array,
+        post_spike: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        eta: float = 1.0,
+        w_min: float = 0.0,
+        w_max: float = 1.0,
+        max_events: int | None = None,
+        pre_events: jax.Array | None = None,
+        post_events: jax.Array | None = None,
+    ) -> jax.Array:
+        from repro.kernels.itp_sparse.ops import sparse_weight_update
+
+        kw = dict(depth=depth, pairing=pairing, compensate=compensate)
+        ltp = self.magnitudes_from_readout(
+            self._readout_rows(pre_read, depth), p.a_plus, p.tau_plus, **kw
+        )
+        ltd = self.magnitudes_from_readout(
+            self._readout_rows(post_read, depth), p.a_minus, p.tau_minus, **kw
+        )
+        return sparse_weight_update(
+            w,
+            pre_spike,
+            post_spike,
+            ltp,
+            ltd,
+            eta=eta,
+            w_min=w_min,
+            w_max=w_max,
+            max_events=max_events,
+            pre_events=pre_events,
+            post_events=post_events,
+        )
+
+    def sparse_delta_from_readout(
+        self,
+        pre_spike: jax.Array,
+        post_spike: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        max_events: int | None = None,
+    ) -> jax.Array:
+        from repro.kernels.itp_sparse.ops import sparse_synapse_delta
+
+        kw = dict(depth=depth, pairing=pairing, compensate=compensate)
+        ltp = self.magnitudes_from_readout(
+            self._readout_rows(pre_read, depth), p.a_plus, p.tau_plus, **kw
+        )
+        ltd = self.magnitudes_from_readout(
+            self._readout_rows(post_read, depth), p.a_minus, p.tau_minus, **kw
+        )
+        return sparse_synapse_delta(pre_spike, post_spike, ltp, ltd, max_events=max_events)
+
+    def sparse_conv_delta_from_readout(
+        self,
+        pre_patches: jax.Array,
+        post_spikes: jax.Array,
+        pre_read: jax.Array,
+        post_read: jax.Array,
+        p: STDPParams,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+        max_events: int | None = None,
+    ) -> jax.Array:
+        from repro.core.stdp import po2_weights
+        from repro.kernels.itp_sparse.ops import sparse_conv_delta
+
+        po2_ltp = p.a_plus * po2_weights(depth, p.tau_plus, compensate=compensate)
+        po2_ltd = p.a_minus * po2_weights(depth, p.tau_minus, compensate=compensate)
+        return sparse_conv_delta(
+            pre_patches,
+            post_spikes,
+            pre_read,
+            post_read,
+            po2_ltp,
+            po2_ltd,
+            nearest=pairing == "nearest",
+            max_events=max_events,
+        )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -124,6 +124,33 @@ def test_po2_signs_and_zeros(key):
 
 
 # ---------------------------------------------------------------------------
+# shard_map version compat
+# ---------------------------------------------------------------------------
+
+def test_shard_map_compat_single_device():
+    """The shim runs on whichever shard_map API the installed jax has.
+
+    Covers the ``axis_names`` translation (→ ``auto`` on the
+    ``jax.experimental`` API) — the call shape MULTIDEV_SCRIPT uses —
+    and the plain fully-manual form the sharded engine uses.
+    """
+    from repro.distributed.sharding import shard_map_compat
+
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    x = jnp.arange(8, dtype=jnp.float32).reshape(1, 8)
+    out = jax.jit(shard_map_compat(
+        lambda g: jax.lax.pmean(g, "pod"),
+        mesh=mesh, in_specs=P("pod"), out_specs=P(),
+        axis_names={"pod"}))(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-6)
+
+    out2 = jax.jit(shard_map_compat(
+        lambda g: jax.lax.pmean(g, "pod"),
+        mesh=mesh, in_specs=P("pod"), out_specs=P()))(x)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(x), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # Multi-device semantics (subprocess; 8 forced host devices)
 # ---------------------------------------------------------------------------
 
@@ -134,6 +161,7 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.distributed.compression import pod_mean_tree
+    from repro.distributed.sharding import shard_map_compat
     from repro.kernels.po2_quant.ref import po2_roundtrip_ref
 
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -142,9 +170,9 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
     def f(g):
         return pod_mean_tree({"g": g}, compress=True)["g"]
 
-    out = jax.jit(jax.shard_map(
+    out = jax.jit(shard_map_compat(
         f, mesh=mesh, in_specs=P("pod"), out_specs=P(),
-        axis_names={"pod"}, check_vma=False))(x)
+        axis_names={"pod"}))(x)
     # expected: mean over pods of po2-quantised rows
     want = np.mean(np.asarray(po2_roundtrip_ref(x)).reshape(2, 1, 8),
                    axis=0)
@@ -153,9 +181,9 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
     # uncompressed path = plain mean
     def g(gr):
         return pod_mean_tree({"g": gr}, compress=False)["g"]
-    out2 = jax.jit(jax.shard_map(
+    out2 = jax.jit(shard_map_compat(
         g, mesh=mesh, in_specs=P("pod"), out_specs=P(),
-        axis_names={"pod"}, check_vma=False))(x)
+        axis_names={"pod"}))(x)
     np.testing.assert_allclose(np.asarray(out2),
                                np.asarray(x).reshape(2, 1, 8).mean(0),
                                rtol=1e-6)

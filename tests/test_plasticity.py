@@ -81,6 +81,35 @@ def test_counter_rule_rejects_all_to_all():
         EngineConfig(rule="exact", pairing="all")
 
 
+def test_sparse_rule_registry():
+    """Only the event-hook (history) rules open the sparse backend column."""
+    assert set(plasticity.sparse_rule_names()) == {"itp", "itp_nocomp"}
+    assert plasticity.get_rule("itp").has_sparse
+    assert not plasticity.get_rule("exact").has_sparse
+    # sparse maps to the non-Pallas path: consumers branch explicitly
+    rule = plasticity.get_rule("itp")
+    assert plasticity.resolve_rule_backend(rule, "sparse") == (False, False)
+
+
+@pytest.mark.parametrize("rule", ["exact", "linear", "imstdp"])
+def test_counter_rule_rejects_sparse_at_construction(rule):
+    """A rule without event hooks fails at config construction — never at
+    trace time — and the message lists the valid alternatives."""
+    with pytest.raises(ValueError, match="event-driven.*itp.*reference"):
+        EngineConfig(rule=rule, backend="sparse")
+    with pytest.raises(ValueError, match="event-driven.*itp.*reference"):
+        snn.mnist_2layer(rule, n_hidden=8, backend="sparse")
+    with pytest.raises(ValueError, match="event-driven"):
+        plasticity.resolve_rule_backend(plasticity.get_rule(rule), "sparse")
+
+
+def test_sparse_cells_construct_for_history_rules():
+    for rule in plasticity.sparse_rule_names():
+        assert EngineConfig(rule=rule, backend="sparse").backend == "sparse"
+        assert snn.mnist_2layer(rule, n_hidden=8,
+                                backend="sparse").backend == "sparse"
+
+
 def test_launcher_cli_rejects_bad_rule():
     """argparse surfaces the registry as --rule choices."""
     import subprocess

@@ -1,0 +1,91 @@
+"""Property tests for the static-shape spike-event extraction.
+
+The event list is the load-bearing primitive of the sparse backend: its
+shape must be jit-stable at ANY spike density, its ordering must be
+deterministic (first-``cap`` active indices, ascending), and saturation
+beyond ``max_events`` must drop exactly the highest-indexed events.
+Pinned here against a plain ``np.nonzero`` oracle over random rasters
+and over packed uint8 history words across depths 1..8.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core.history import pack_bitplanes
+from repro.kernels.itp_sparse.events import event_cap, spike_events, word_events
+
+
+def _oracle(spikes: np.ndarray, cap: int) -> tuple[np.ndarray, int]:
+    """First-``cap`` active indices ascending, sentinel-padded to ``cap``."""
+    (active,) = np.nonzero(spikes)
+    kept = active[:cap]
+    idx = np.full((cap,), spikes.shape[-1], dtype=np.int32)
+    idx[: len(kept)] = kept
+    return idx, len(kept)
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data(), n=st.integers(1, 40), cap=st.integers(1, 45))
+def test_spike_events_matches_nonzero_prefix(data, n, cap):
+    spikes = np.asarray(data.draw(st.lists(st.integers(0, 1), min_size=n, max_size=n)))
+    idx, count = spike_events(jnp.asarray(spikes), cap)
+    want_idx, want_count = _oracle(spikes, event_cap(n, cap))
+    assert idx.shape == (event_cap(n, cap),)  # static at any density
+    assert idx.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(idx), want_idx)
+    assert int(count) == want_count
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data(), n=st.integers(1, 32))
+def test_spike_events_saturates_at_cap(data, n):
+    """All-ones input: the cap keeps the lowest indices, count saturates."""
+    cap = data.draw(st.integers(1, n))
+    idx, count = spike_events(jnp.ones((n,)), cap)
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(cap))
+    assert int(count) == cap
+
+
+def test_spike_events_shapes_are_density_invariant():
+    """Same jitted extraction serves silent, sparse, and dense inputs."""
+    n, cap = 16, 5
+    fn = jax.jit(lambda s: spike_events(s, cap))
+    shapes = set()
+    for raster in (np.zeros(n), np.eye(n)[3], np.ones(n)):
+        idx, count = fn(jnp.asarray(raster))
+        shapes.add((idx.shape, str(idx.dtype)))
+    assert shapes == {((cap,), "int32")}
+    idx, count = fn(jnp.zeros((n,)))
+    assert int(count) == 0 and np.all(np.asarray(idx) == n)  # all sentinel
+
+
+def test_event_cap_validation():
+    assert event_cap(10, None) == 10
+    assert event_cap(10, 99) == 10  # clamped to population
+    assert event_cap(10, 3) == 3
+    np.testing.assert_raises(ValueError, event_cap, 10, 0)
+    np.testing.assert_raises(ValueError, event_cap, 10, -1)
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data(), depth=st.integers(1, 8), n=st.integers(1, 24))
+def test_word_events_reads_packed_slots(data, depth, n):
+    """Packed-word extraction ≡ extraction on the unpacked bit slot."""
+    row = st.lists(st.integers(0, 1), min_size=n, max_size=n)
+    bits = np.asarray(data.draw(st.lists(row, min_size=depth, max_size=depth)))  # (depth, n)
+    words = pack_bitplanes(jnp.asarray(bits))  # (n,) uint8
+    slot = data.draw(st.integers(0, depth - 1))
+    cap = data.draw(st.integers(1, n + 2))
+    idx, count = word_events(words, depth, cap, slot=slot)
+    want_idx, want_count = _oracle(bits[slot], event_cap(n, cap))
+    np.testing.assert_array_equal(np.asarray(idx), want_idx)
+    assert int(count) == want_count
+
+
+def test_word_events_slot_validation():
+    words = jnp.zeros((4,), jnp.uint8)
+    np.testing.assert_raises(ValueError, word_events, words, 4, None, slot=4)
+    np.testing.assert_raises(ValueError, word_events, words, 4, None, slot=-1)
+    np.testing.assert_raises(ValueError, word_events, words, 9)
