@@ -1,0 +1,168 @@
+"""Benchmark: unsupervised train-to-accuracy — ITP vs exact STDP, per backend.
+
+Runs the full system-level protocol of ``repro.train.stdp_trainer``
+(epochs of unsupervised STDP with hard-WTA competition + adaptive-threshold
+homeostasis, then label-assignment evaluation) on the 2-layer SNN over the
+digits stand-in, for every cell of the accuracy grid:
+
+    itp   × reference, fused_interpret, sparse
+    exact × reference, fused_interpret
+
+The claim under test is the paper's end-to-end one: ITP-STDP (po2 updates
+with timing compensation, eq. 18) reaches the *same classification
+accuracy* as exact STDP — not just the same weight trajectories.  With a
+shared seed the compensated-ITP and exact trajectories are bit-identical
+on the reference backend (pinned in tests/test_plasticity.py), so the
+``itp_vs_exact_gap`` here should be ≈ 0; ``GAP_TOLERANCE`` leaves room for
+kernel-backend numeric drift only.
+
+Merges a ``train_to_accuracy`` section into the tracked repo-root
+BENCH_accuracy.json (``benchmarks/bench_io.py`` read-modify-write);
+``--quick`` runs use a shorter, incomparable protocol and land in the
+gitignored ``.quick`` twin, which the CI accuracy gate reads.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.bench_io import update_bench_json
+from repro.launch.cli import sampler_for
+from repro.models import snn
+from repro.train.stdp_trainer import TrainerConfig, train_to_accuracy
+
+NET = "2layer-snn"
+
+# rule × backend cells; sparse is itp-only (counter rules have no
+# event-driven datapath — resolve_rule_backend rejects the pair)
+GRID = (
+    ("itp", "reference"),
+    ("itp", "fused_interpret"),
+    ("itp", "sparse"),
+    ("exact", "reference"),
+    ("exact", "fused_interpret"),
+)
+QUICK_GRID = (
+    ("itp", "reference"),
+    ("itp", "sparse"),
+    ("exact", "reference"),
+)
+
+# |final_itp − final_exact| on the reference backend; ≈ 0 by the
+# trajectory-identity pin, tolerance covers eval sampling granularity only
+GAP_TOLERANCE = 0.05
+
+# homeostasis / competition knobs that make unsupervised STDP class-
+# selective on the digits stand-in (tuned once, shared by every cell so
+# differences isolate rule × backend)
+THETA_PLUS = 0.05
+HARD_WTA = True
+
+FULL_TCFG = TrainerConfig(
+    epochs=6,
+    batches_per_epoch=8,
+    batch=16,
+    t_steps=30,
+    assign_batches=6,
+    eval_batches=8,
+)
+QUICK_TCFG = TrainerConfig(
+    epochs=2,
+    batches_per_epoch=8,
+    batch=16,
+    t_steps=30,
+    assign_batches=4,
+    eval_batches=4,
+)
+
+
+def run_cell(rule: str, backend: str, tcfg: TrainerConfig) -> dict:
+    """One grid cell: train to accuracy, return the JSON-ready record."""
+    sampler, n_classes = sampler_for(NET)
+    cfg = snn.PAPER_NETWORKS[NET](
+        rule,
+        backend=backend,
+        theta_plus=THETA_PLUS,
+        hard_wta=HARD_WTA,
+    )
+    t0 = time.time()
+    r = train_to_accuracy(cfg, sampler, n_classes, tcfg)
+    return {
+        "rule": rule,
+        "backend": backend,
+        "accuracy_curve": r["accuracy_curve"],
+        "final_accuracy": r["final_accuracy"],
+        "best_accuracy": max(r["accuracy_curve"]),
+        "mean_eval_rate": r["mean_eval_rates"][-1],
+        "train_seconds": r["train_seconds"],
+        "wall_seconds": round(time.time() - t0, 3),
+        "chance": r["chance"],
+    }
+
+
+def run(
+    out_dir: str = "experiments/bench",
+    verbose: bool = True,
+    quick: bool = False,
+) -> dict:
+    grid = QUICK_GRID if quick else GRID
+    tcfg = QUICK_TCFG if quick else FULL_TCFG
+    cells = [run_cell(rule, backend, tcfg) for rule, backend in grid]
+    by_cell = {f"{c['rule']}/{c['backend']}": c for c in cells}
+    itp_ref = by_cell["itp/reference"]["final_accuracy"]
+    exact_ref = by_cell["exact/reference"]["final_accuracy"]
+    gap = abs(itp_ref - exact_ref)
+    itp_finals = [c["final_accuracy"] for c in cells if c["rule"] == "itp"]
+    out = {
+        "benchmark": "unsupervised_train_to_accuracy",
+        "net": NET,
+        "quick": quick,
+        "protocol": {
+            "epochs": tcfg.epochs,
+            "batches_per_epoch": tcfg.batches_per_epoch,
+            "batch": tcfg.batch,
+            "t_steps": tcfg.t_steps,
+            "assign_batches": tcfg.assign_batches,
+            "eval_batches": tcfg.eval_batches,
+            "seed": tcfg.seed,
+            "theta_plus": THETA_PLUS,
+            "hard_wta": HARD_WTA,
+        },
+        "chance": cells[0]["chance"],
+        "cells": cells,
+        "itp_vs_exact_gap": gap,
+        "gap_tolerance": GAP_TOLERANCE,
+        "itp_backend_spread": max(itp_finals) - min(itp_finals),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "accuracy.json"), "w") as f:
+        json.dump(out, f)
+    bench_name = "BENCH_accuracy.quick.json" if quick else "BENCH_accuracy.json"
+    update_bench_json(bench_name, {"train_to_accuracy": out})
+    if verbose:
+        print(
+            f"— unsupervised train-to-accuracy ({NET}, "
+            f"{tcfg.epochs} epochs, chance {out['chance']:.2f}) —"
+        )
+        print(
+            f"  {'rule':>6s} {'backend':>16s} {'final':>7s} {'best':>7s} "
+            f"{'rate':>7s} {'train s':>8s}"
+        )
+        for c in cells:
+            print(
+                f"  {c['rule']:>6s} {c['backend']:>16s} "
+                f"{c['final_accuracy']:7.3f} {c['best_accuracy']:7.3f} "
+                f"{c['mean_eval_rate']:7.3f} {c['train_seconds']:8.2f}"
+            )
+        print(
+            f"  itp-vs-exact gap (reference): {gap:.3f} "
+            f"(tolerance {GAP_TOLERANCE}), itp backend spread "
+            f"{out['itp_backend_spread']:.3f}"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -9,6 +9,9 @@ it exercises):
     drift             — Fig. 5 + §IV-A numbers (RMSE / equilibrium / conv.)
     isi               — Fig. 6 ISI histogram + depth-7 coverage
     network_accuracy  — Table II accuracy parity (3 nets × 3 rules)
+    accuracy          — unsupervised train-to-accuracy: ITP vs exact
+                        STDP end-to-end (homeostasis + label assignment)
+                        across backends, itp-vs-exact gap gated in CI
     engine_cost       — Tables III-V op/bit model + measured SOP/s
     rule_cost         — per-rule engine throughput, reference + fused
                         (ITP vs the fused counter kernels & co.)
@@ -48,6 +51,14 @@ def _run_network_accuracy(args):
     kw = {"n_train": 48, "n_test": 32, "seeds": (0,)} if args.quick else {}
     network_accuracy.run(args.out, **kw)
     return {}
+
+
+def _run_accuracy(args):
+    from benchmarks import accuracy
+    r = accuracy.run(args.out, quick=args.quick)
+    return {"itp_vs_exact_gap": r["itp_vs_exact_gap"],
+            "finals": {f"{c['rule']}/{c['backend']}": c["final_accuracy"]
+                       for c in r["cells"]}}
 
 
 def _run_engine_cost(args):
@@ -105,6 +116,7 @@ MODULES = {
     "drift": _run_drift,
     "isi": _run_isi,
     "network_accuracy": _run_network_accuracy,
+    "accuracy": _run_accuracy,
     "engine_cost": _run_engine_cost,
     "rule_cost": _run_rule_cost,
     "conv_cost": _run_conv_cost,

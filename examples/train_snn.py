@@ -1,122 +1,55 @@
-"""End-to-end driver: train one of the paper's SNNs with ITP-STDP.
+"""End-to-end driver: train one of the paper's SNNs with ITP-STDP to
+classification accuracy.
 
-A few hundred unsupervised STDP steps over rate-coded synthetic data
-(the paper's protocol with the offline stand-in datasets), then a ridge
-readout on the frozen spike-count features — the Table II pipeline.
-``--net`` selects the network: the 2-layer fc SNN, the 6-layer conv DCSNN
-or the 5-layer conv CSNN; ``--backend`` selects the weight-update
-datapath for every layer kind (the conv nets exercise the im2col-fused
-conv kernel, the fc layers the dense engine kernel).
+Epochs of unsupervised STDP over rate-coded synthetic stand-in data with
+intra-layer competition (soft lateral inhibition / ``--hard-wta``) and
+adaptive-threshold homeostasis (``--theta-plus`` / ``--theta-tau``), each
+followed by the label-assignment evaluation of
+``repro.train.stdp_trainer``: every excitatory neuron is assigned to its
+max-response class on a held-out pass, then samples classify by the
+assigned-population vote — the fully unsupervised Table II protocol.
 
 Run:  PYTHONPATH=src python examples/train_snn.py \
           [--net 2layer-snn|6layer-dcsnn|5layer-csnn] \
           [--rule itp|itp_nocomp|exact|linear|imstdp] \
-          [--backend reference|fused|fused_interpret|sparse]
-      (--steps 300 ≈ 300 simulation steps = 10 batches × 30-step rasters)
+          [--backend reference|fused|fused_interpret|sparse] \
+          [--epochs 5] [--theta-plus 0.02] [--hard-wta]
 
-``--rule`` selects the learning rule from the ``repro.plasticity``
-registry — the paper's Table II comparison axis.  Every rule runs on
-every fused* backend: the counter rules (exact/linear/imstdp) ride the
-fused explicit-Δt kernels of ``repro.kernels.itp_counter``, so the rule
-comparison is kernel-vs-kernel.  ``--backend sparse`` selects the
-event-driven datapath for the history rules (``--max-events`` caps the
-static event-list length per side).
+Every flag is declared once in ``repro.launch.cli`` and shared verbatim
+with ``python -m repro.launch.train --snn`` — the two entry points build
+the same ``SNNConfig`` / ``TrainerConfig`` pair.  ``--rule`` selects the
+learning rule from the ``repro.plasticity`` registry (the paper's
+Table II comparison axis); every rule runs on every backend it supports,
+so the accuracy comparison is kernel-vs-kernel.
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro import plasticity
-from repro.data import (Prefetcher, encode_batch, spike_stream,
-                        synthetic_digits, synthetic_fashion, synthetic_fault)
-from repro.kernels.dispatch import BACKENDS
+from repro.launch import cli
 from repro.models import snn
-
-SAMPLERS = {
-    "2layer-snn": (lambda k, n: synthetic_digits(k, n), 10),
-    "6layer-dcsnn": (lambda k, n: synthetic_fashion(k, n), 10),
-    "5layer-csnn": (lambda k, n: synthetic_fault(k, n), 4),
-}
-assert set(SAMPLERS) == set(snn.PAPER_NETWORKS), \
-    "SAMPLERS must cover every network in snn.PAPER_NETWORKS"
+from repro.train.stdp_trainer import train_to_accuracy
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--net", default="2layer-snn", choices=tuple(SAMPLERS),
-                    help="which of the paper's three networks to train")
-    ap.add_argument("--rule", default="itp",
-                    choices=plasticity.rule_names(),
-                    help="learning rule (paper Table II axis); every rule "
-                         "runs on every --backend")
-    ap.add_argument("--backend", default="reference", choices=BACKENDS,
-                    help="weight-update datapath: pure-jnp reference, the "
-                         "fused Pallas kernels (interpret mode runs them on "
-                         "CPU), or the event-driven sparse path; applies to "
-                         "fc and conv layers alike")
-    ap.add_argument("--max-events", type=int, default=None,
-                    help="sparse backend: static event-list cap per side "
-                         "(default: uncapped)")
-    ap.add_argument("--steps", type=int, default=300,
-                    help="total simulation steps of STDP training")
-    ap.add_argument("--t-raster", type=int, default=30)
-    ap.add_argument("--batch", type=int, default=16)
-    ap.add_argument("--hidden", type=int, default=100,
-                    help="hidden width (2layer-snn only)")
+    cli.add_net_flag(ap, "--net")
+    cli.add_update_flags(ap)
+    cli.add_train_flags(ap)
     args = ap.parse_args()
 
-    maker = snn.PAPER_NETWORKS[args.net]
-    kw = {"n_hidden": args.hidden} if args.net == "2layer-snn" else {}
-    cfg = maker(args.rule, backend=args.backend,
-                max_events=args.max_events, **kw)
-    sampler, n_classes = SAMPLERS[args.net]
-    key = jax.random.PRNGKey(0)
-    state = snn.init_snn(key, cfg, args.batch)
-    n_batches = max(args.steps // args.t_raster, 1)
+    cfg = cli.snn_config_from_args(args)
+    tcfg = cli.trainer_config_from_args(args)
+    sampler, n_classes = cli.sampler_for(args.net)
 
     print(f"training {cfg.name} ({'×'.join(str(d) for d in cfg.input_shape)}"
-          f"→{snn.feature_size(cfg)}) with rule={args.rule!r} "
-          f"backend={args.backend!r}: "
-          f"{n_batches} batches × {args.t_raster} steps")
-    stream = Prefetcher(spike_stream(
-        key, sampler,
-        batch=args.batch, t_steps=args.t_raster, n_steps=n_batches))
-
-    t0 = time.time()
-    for i, batch in enumerate(stream):
-        state, counts = snn.run_snn(state, batch["spikes"], cfg, train=True)
-        state = snn.reset_dynamics(state, cfg, args.batch)
-        if i % 2 == 0:
-            w = state.weights[0]
-            print(f"  batch {i:3d}: mean rate "
-                  f"{float(counts.mean()) / args.t_raster:.3f}  "
-                  f"w∈[{float(w.min()):.2f},{float(w.max()):.2f}] "
-                  f"μ={float(w.mean()):.3f}")
-    print(f"STDP training done in {time.time() - t0:.1f}s")
-
-    # frozen-feature readout (Table II protocol)
-    def features(n, seed):
-        fs, ls = [], []
-        kk = jax.random.PRNGKey(seed)
-        s = state
-        for _ in range(n // args.batch):
-            kk, kd, ke = jax.random.split(kk, 3)
-            x, y = sampler(kd, args.batch)
-            s = snn.reset_dynamics(s, cfg, args.batch)
-            s, c = snn.run_snn(s, encode_batch(ke, x, args.t_raster), cfg,
-                               train=False)
-            fs.append(c)
-            ls.append(y)
-        return jnp.concatenate(fs), jnp.concatenate(ls)
-
-    Xtr, ytr = features(96, 10)
-    Xte, yte = features(64, 20)
-    W = snn.fit_readout(Xtr, ytr, n_classes)
-    acc = snn.readout_accuracy(W, Xte, yte)
-    print(f"readout accuracy: {acc:.3f} (chance {1.0 / n_classes:.3f}) — "
-          f"net={args.net!r} rule={args.rule!r} backend={args.backend!r}")
+          f"→{snn.feature_size(cfg)}) with rule={cfg.rule!r} "
+          f"backend={cfg.backend!r}: {tcfg.epochs} epochs × "
+          f"{tcfg.batches_per_epoch} batches × {tcfg.t_steps} steps "
+          f"(θ+ {cfg.theta_plus}, hard WTA {cfg.hard_wta})")
+    result = train_to_accuracy(cfg, sampler, n_classes, tcfg, verbose=True)
+    print(f"STDP training done in {result['train_seconds']:.1f}s")
+    print(f"assignment accuracy: {result['final_accuracy']:.3f} "
+          f"(chance {result['chance']:.3f}) — net={cfg.name!r} "
+          f"rule={cfg.rule!r} backend={cfg.backend!r}")
 
 
 if __name__ == "__main__":

@@ -9,10 +9,13 @@ benchmarks instead of maintaining a parallel one-off API.  A counter
 saturation at W+1 — identical semantics to the old standalone engine).
 
 These aliases keep old call sites green (pinned by
-tests/test_plasticity.py); new code should use ``repro.core.engine`` with
+tests/test_plasticity.py) but now emit ``DeprecationWarning`` pointing at
+the registry path; new code should use ``repro.core.engine`` with
 ``rule="exact"`` directly.
 """
 from __future__ import annotations
+
+import warnings
 
 from repro.core.engine import (EngineConfig, EngineState, engine_step,
                                init_engine, run_engine)
@@ -22,12 +25,21 @@ from repro.core.stdp import STDPParams
 CounterEngineState = EngineState
 
 
+def _deprecated(alias: str, target: str) -> None:
+    warnings.warn(
+        f"repro.core.baseline.{alias} is deprecated: the counter baseline "
+        f"is the registry rule EngineConfig(rule='exact') — use "
+        f"repro.core.engine.{target} directly",
+        DeprecationWarning, stacklevel=3)
+
+
 def CounterEngineConfig(n_pre: int = 4, n_post: int = 4, window: int = 7,
                         eta: float = 1.0 / 16.0, w_min: float = 0.0,
                         w_max: float = 1.0,
                         stdp: STDPParams | None = None,
                         lif: LIFParams | None = None) -> EngineConfig:
     """Deprecated: build the equivalent ``EngineConfig(rule="exact")``."""
+    _deprecated("CounterEngineConfig", "EngineConfig(rule='exact')")
     return EngineConfig(
         n_pre=n_pre, n_post=n_post, depth=window + 1, rule="exact",
         eta=eta, w_min=w_min, w_max=w_max,
@@ -37,18 +49,21 @@ def CounterEngineConfig(n_pre: int = 4, n_post: int = 4, window: int = 7,
 
 def init_counter_engine(key, cfg, w_init=None):
     """Deprecated alias for :func:`repro.core.engine.init_engine`."""
+    _deprecated("init_counter_engine", "init_engine")
     _check_exact(cfg)
     return init_engine(key, cfg, w_init)
 
 
 def counter_engine_step(state, pre_spikes, cfg):
     """Deprecated alias for :func:`repro.core.engine.engine_step`."""
+    _deprecated("counter_engine_step", "engine_step")
     _check_exact(cfg)
     return engine_step(state, pre_spikes, cfg)
 
 
 def run_counter_engine(state, spike_train, cfg):
     """Deprecated alias for :func:`repro.core.engine.run_engine`."""
+    _deprecated("run_counter_engine", "run_engine")
     _check_exact(cfg)
     return run_engine(state, spike_train, cfg)
 

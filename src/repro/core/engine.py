@@ -66,16 +66,12 @@ class EngineConfig:
     lif: LIFParams = dataclasses.field(default_factory=LIFParams)
 
     def __post_init__(self):
-        # config-construction-time validation of the rule × backend cell:
-        # unknown names list the valid options; kernel-less rules reject
-        # the fused* backends with the actionable alternatives
-        rule = plasticity.get_rule(self.rule)
-        plasticity.resolve_rule_backend(rule, self.backend)
-        rule.check_pairing(self.pairing)
-        if self.max_events is not None and self.max_events < 1:
-            raise ValueError(
-                f"max_events must be a positive event-list cap or None "
-                f"(uncapped), got {self.max_events}")
+        # config-construction-time validation of the rule × backend cell —
+        # the single shared validator (plasticity.validate_update_config)
+        # keeps messages and valid-option listings identical to SNNConfig's
+        plasticity.validate_update_config(
+            rule=self.rule, backend=self.backend, pairing=self.pairing,
+            max_events=self.max_events)
 
     def learning_rule(self) -> plasticity.LearningRule:
         return plasticity.get_rule(self.rule)

@@ -40,10 +40,16 @@ def lif_init(shape, p: LIFParams) -> LIFState:
     return LIFState(v=jnp.full(shape, p.e_rest, jnp.float32))
 
 
-def lif_step(state: LIFState, i_in: jax.Array, p: LIFParams) -> tuple[LIFState, jax.Array]:
-    """Exact LIF update (eq. 4) + threshold/reset (eq. 5)."""
+def lif_step(state: LIFState, i_in: jax.Array, p: LIFParams,
+             v_th_offset: jax.Array | float = 0.0) -> tuple[LIFState, jax.Array]:
+    """Exact LIF update (eq. 4) + threshold/reset (eq. 5).
+
+    ``v_th_offset`` raises the firing threshold per neuron (broadcast
+    against ``v``) — the adaptive-threshold homeostasis term θ of the
+    unsupervised training pipeline; 0 keeps the plain fixed threshold.
+    """
     v = p.alpha * (state.v - p.e_rest) + p.e_rest + i_in
-    spikes = (v > p.v_th)
+    spikes = (v > p.v_th + v_th_offset)
     v = jnp.where(spikes, p.e_rest, v)
     return LIFState(v=v), spikes
 
@@ -104,15 +110,20 @@ def izhikevich_init(shape, p: IzhikevichParams) -> IzhikevichState:
 
 
 def izhikevich_step(state: IzhikevichState, i_in: jax.Array,
-                    p: IzhikevichParams) -> tuple[IzhikevichState, jax.Array]:
+                    p: IzhikevichParams,
+                    v_th_offset: jax.Array | float = 0.0
+                    ) -> tuple[IzhikevichState, jax.Array]:
+    """One Euler step; ``v_th_offset`` is the per-neuron adaptive-threshold
+    homeostasis term (broadcast against ``v``), 0 = plain threshold."""
     v, u = state.v, state.u
     dv = 0.04 * v * v + 5.0 * v + 140.0 - u + i_in
     du = p.a * (p.b * v - u)
     v = v + p.dt * dv
     u = u + p.dt * du
-    spikes = v >= p.v_th
+    spikes = v >= p.v_th + v_th_offset
     v = jnp.where(spikes, p.c, v)
     u = jnp.where(spikes, u + p.d, u)
-    # clamp against Euler blow-up at large dt (standard practice)
-    v = jnp.clip(v, -120.0, p.v_th)
+    # clamp against Euler blow-up at large dt (standard practice); the
+    # ceiling tracks the effective (homeostasis-raised) threshold
+    v = jnp.clip(v, -120.0, p.v_th + v_th_offset)
     return IzhikevichState(v=v, u=u), spikes

@@ -55,6 +55,7 @@ class Prefetcher:
         self._depth = depth
         self._lock = threading.Lock()
         self._done = False
+        self._stop = threading.Event()
         self._thread = threading.Thread(target=self._fill, daemon=True)
         self._event = threading.Event()
         self._space = threading.Event()
@@ -64,7 +65,9 @@ class Prefetcher:
     def _fill(self):
         try:
             for item in self._it:
-                while True:
+                if self._stop.is_set():
+                    return
+                while not self._stop.is_set():
                     with self._lock:
                         if len(self._q) < self._depth:
                             self._q.append(jax.device_put(item))
@@ -75,6 +78,26 @@ class Prefetcher:
         finally:
             self._done = True
             self._event.set()
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop the background thread and drop buffered batches.
+
+        Safe to call at any point — including before the source iterator is
+        exhausted (early abandonment: a training loop that stops at an
+        accuracy target, or an exception unwinding through the consumer).
+        Idempotent; after it returns the fill thread has exited.
+        """
+        self._stop.set()
+        self._space.set()          # unblock a producer waiting for space
+        self._thread.join(timeout=timeout)
+        with self._lock:
+            self._q.clear()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     def __iter__(self):
         return self

@@ -1,0 +1,237 @@
+"""Shared CLI plumbing for the SNN training entry points.
+
+``examples/train_snn.py`` and ``python -m repro.launch.train --snn`` drive
+the same train-to-accuracy loop (``repro.train.stdp_trainer``), so every
+flag that feeds ``SNNConfig`` / ``TrainerConfig`` is declared exactly once
+here — network / rule / backend / max-events selection, the epoch-level
+training knobs, and the homeostasis knobs — and both entry points consume
+the same constructors.  The entry point chooses only the *spelling* of the
+network selector (``--net`` standalone, ``--snn`` as the launcher's mode
+switch); choices, help text, and defaults live here.
+
+The builders accept any ``argparse.Namespace``-shaped object and fall back
+to the dataclass defaults for missing attributes, so programmatic callers
+(tests, benchmarks) can pass minimal namespaces — including the legacy
+launcher shape whose ``--steps`` meant total simulation steps.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro import plasticity
+from repro.data import synthetic_digits, synthetic_fashion, synthetic_fault
+from repro.kernels.dispatch import BACKENDS
+from repro.models import snn
+from repro.train.stdp_trainer import TrainerConfig
+
+# network → (sampler over the offline stand-in dataset, n_classes); the
+# single source both entry points and benchmarks/accuracy.py read
+SAMPLERS = {
+    "2layer-snn": (lambda k, n: synthetic_digits(k, n), 10),
+    "6layer-dcsnn": (lambda k, n: synthetic_fashion(k, n), 10),
+    "5layer-csnn": (lambda k, n: synthetic_fault(k, n), 4),
+}
+assert set(SAMPLERS) == set(snn.PAPER_NETWORKS), (
+    "SAMPLERS must cover every network in snn.PAPER_NETWORKS"
+)
+
+
+def sampler_for(net: str) -> tuple:
+    """(sampler, n_classes) for one of the paper's networks."""
+    return SAMPLERS[net]
+
+
+def add_net_flag(
+    ap: argparse.ArgumentParser,
+    flag: str = "--net",
+    *,
+    default: str | None = "2layer-snn",
+) -> None:
+    """The network selector — declared here once; entry points pick the
+    flag spelling (``--net``, or ``--snn`` doubling as the launcher's mode
+    switch with ``default=None``)."""
+    ap.add_argument(
+        flag,
+        dest="net",
+        default=default,
+        choices=tuple(SAMPLERS),
+        help="which of the paper's three networks to train (2-layer fc "
+        "SNN, 6-layer conv DCSNN, 5-layer conv CSNN)",
+    )
+
+
+def add_update_flags(ap: argparse.ArgumentParser) -> None:
+    """Learning-rule / weight-update-datapath selection (rule × backend)."""
+    ap.add_argument(
+        "--rule",
+        default="itp",
+        choices=plasticity.rule_names(),
+        help="learning rule (paper Table II axis); every rule runs on "
+        "every --backend it supports",
+    )
+    ap.add_argument(
+        "--backend",
+        default="reference",
+        choices=BACKENDS,
+        help="weight-update datapath: pure-jnp reference, the fused "
+        "Pallas kernels (interpret mode runs them on CPU), or the "
+        "event-driven sparse path; applies to fc and conv layers alike",
+    )
+    ap.add_argument(
+        "--max-events",
+        type=int,
+        default=None,
+        help="sparse backend: static event-list cap per side (default: "
+        "uncapped; excess highest-indexed events are dropped)",
+    )
+
+
+def add_train_flags(
+    ap: argparse.ArgumentParser,
+    *,
+    batch_default: int | None = None,
+) -> None:
+    """Epoch-level training + homeostasis knobs (``None`` defaults defer
+    to the ``TrainerConfig`` / ``SNNConfig`` dataclass defaults)."""
+    ap.add_argument(
+        "--epochs",
+        type=int,
+        default=None,
+        help="training epochs (each followed by a label-assignment "
+        "evaluation pass)",
+    )
+    ap.add_argument(
+        "--batches-per-epoch",
+        type=int,
+        default=None,
+        help="rasters per epoch",
+    )
+    ap.add_argument(
+        "--batch",
+        type=int,
+        default=batch_default,
+        help="samples per raster batch",
+    )
+    ap.add_argument(
+        "--t-raster",
+        type=int,
+        default=None,
+        help="simulation steps per raster",
+    )
+    ap.add_argument(
+        "--assign-batches",
+        type=int,
+        default=None,
+        help="held-out batches for the label-assignment pass",
+    )
+    ap.add_argument(
+        "--eval-batches",
+        type=int,
+        default=None,
+        help="held-out batches for the accuracy pass",
+    )
+    ap.add_argument(
+        "--seed",
+        type=int,
+        default=None,
+        help="PRNG seed of the whole run",
+    )
+    ap.add_argument(
+        "--hidden",
+        type=int,
+        default=None,
+        help="hidden width (2layer-snn only)",
+    )
+    ap.add_argument(
+        "--theta-plus",
+        type=float,
+        default=None,
+        help="adaptive-threshold homeostasis increment per spike "
+        "(0 disables)",
+    )
+    ap.add_argument(
+        "--theta-tau",
+        type=float,
+        default=None,
+        help="homeostasis threshold decay time constant (steps)",
+    )
+    ap.add_argument(
+        "--inhibition",
+        type=float,
+        default=None,
+        help="soft lateral-inhibition strength",
+    )
+    ap.add_argument(
+        "--hard-wta",
+        action="store_true",
+        help="hard winner-take-all: only the most-driven super-threshold "
+        "neuron fires per sample/position",
+    )
+
+
+def net_from_args(args) -> str:
+    """The selected network — ``args.net`` from the shared flag, or the
+    legacy ``args.snn`` attribute of programmatic launcher namespaces."""
+    net = getattr(args, "net", None) or getattr(args, "snn", None)
+    if not net:
+        raise ValueError(f"no network selected; choose one of {tuple(SAMPLERS)}")
+    return net
+
+
+def snn_config_from_args(args, *, net: str | None = None) -> snn.SNNConfig:
+    """Build the ``SNNConfig`` both entry points share from parsed flags.
+
+    Only flags the user actually set (non-``None``) override the network
+    maker's defaults, so e.g. ``mnist_2layer``'s soft inhibition survives
+    unless ``--inhibition`` is given.
+    """
+    net = net or net_from_args(args)
+    maker = snn.PAPER_NETWORKS[net]
+    kw = {}
+    if net == "2layer-snn" and getattr(args, "hidden", None) is not None:
+        kw["n_hidden"] = args.hidden
+    for name in ("theta_plus", "theta_tau", "inhibition"):
+        v = getattr(args, name, None)
+        if v is not None:
+            kw[name] = v
+    if getattr(args, "hard_wta", False):
+        kw["hard_wta"] = True
+    return maker(
+        getattr(args, "rule", "itp"),
+        backend=getattr(args, "backend", "reference"),
+        max_events=getattr(args, "max_events", None),
+        **kw,
+    )
+
+
+def trainer_config_from_args(args) -> TrainerConfig:
+    """Build the ``TrainerConfig`` from parsed flags.
+
+    Missing/``None`` attributes fall back to the dataclass defaults.  A
+    legacy ``steps`` attribute (the launcher's total-simulation-steps
+    knob, still used by ``--engine`` mode and programmatic callers) maps
+    to a single epoch of ``steps`` total simulation steps with a short
+    evaluation, unless explicit epoch flags override it.
+    """
+    kw = {}
+    for attr, field in (
+        ("epochs", "epochs"),
+        ("batches_per_epoch", "batches_per_epoch"),
+        ("batch", "batch"),
+        ("t_raster", "t_steps"),
+        ("assign_batches", "assign_batches"),
+        ("eval_batches", "eval_batches"),
+        ("seed", "seed"),
+    ):
+        v = getattr(args, attr, None)
+        if v is not None:
+            kw[field] = v
+    steps = getattr(args, "steps", None)
+    if steps is not None and "t_steps" not in kw:
+        kw["t_steps"] = max(min(steps, 30), 1)
+        kw.setdefault("batches_per_epoch", max(steps // kw["t_steps"], 1))
+        kw.setdefault("epochs", 1)
+        kw.setdefault("assign_batches", 2)
+        kw.setdefault("eval_batches", 2)
+    return TrainerConfig(**kw)

@@ -16,7 +16,11 @@ fused Pallas datapath (and the counter-rule baselines) end-to-end.  The
 the static event-list length per side).
 
 ``--snn <net>`` switches to the paper's network workloads (2-layer SNN,
-6-layer DCSNN, 5-layer CSNN) on the same selectable rule and backend:
+6-layer DCSNN, 5-layer CSNN) on the same selectable rule and backend,
+driving the shared train-to-accuracy loop of
+``repro.train.stdp_trainer`` — unsupervised STDP epochs with
+homeostasis/WTA competition and the label-assignment evaluation — through
+the same CLI builder (``repro.launch.cli``) as ``examples/train_snn.py``:
 the conv nets drive the rule's im2col-fused conv kernel, the fc layers
 its dense engine kernel — the launcher path for the whole-network fused
 datapath.  Every registered rule is kernel-backed (history rules →
@@ -31,13 +35,12 @@ import time
 
 import jax
 
-from repro import plasticity
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.data import LMBatchSpec, lm_batches
 from repro.distributed.fault_tolerance import (FailureInjector, RunnerConfig,
                                                TrainingRunner)
 from repro.distributed.sharding import use_mesh
-from repro.kernels.dispatch import BACKENDS
+from repro.launch import cli
 from repro.launch.mesh import describe, make_debug_mesh
 from repro.train import (OptimizerConfig, TrainConfig, init_training,
                          make_train_step)
@@ -92,37 +95,27 @@ def run_engine_training(args) -> dict:
 
 
 def run_snn_training(args) -> dict:
-    """One of the paper's SNNs on the selected rule + backend.
+    """One of the paper's SNNs, trained to accuracy on rule + backend.
 
-    Trains the chosen network on Bernoulli rasters for ``--steps``
-    simulation steps and reports wall-clock + synaptic-update throughput.
-    The conv nets (6layer-dcsnn, 5layer-csnn) exercise the im2col-fused
-    conv kernel (``repro.kernels.itp_stdp_conv``) end-to-end; returns the
-    summary dict (also printed) so tests can call this directly.
+    Drives the shared train-to-accuracy loop
+    (``repro.train.stdp_trainer``) — epochs of unsupervised STDP over
+    rate-coded stand-in data with the label-assignment evaluation after
+    each — through the same ``SNNConfig`` / ``TrainerConfig`` builders as
+    ``examples/train_snn.py`` (``repro.launch.cli``).  The conv nets
+    (6layer-dcsnn, 5layer-csnn) exercise the im2col-fused conv kernel
+    end-to-end.  Reports accuracy plus wall-clock + synaptic-update
+    throughput; returns the summary dict (also printed) so tests can call
+    this directly, including with legacy ``--steps``-style namespaces.
     """
+    from repro.launch import cli
     from repro.models import snn
+    from repro.train.stdp_trainer import train_to_accuracy
 
-    rule = getattr(args, "rule", "itp")
-    cfg = snn.PAPER_NETWORKS[args.snn](
-        rule, backend=args.backend,
-        max_events=getattr(args, "max_events", None))
-    key = jax.random.PRNGKey(0)
-    state = snn.init_snn(key, cfg, args.batch)
-    n_in = 1
-    for d in cfg.input_shape:
-        n_in *= d
-    raster = jax.random.bernoulli(
-        jax.random.fold_in(key, 1), args.engine_rate,
-        (args.steps, args.batch, n_in))
-
-    t0 = time.time()
-    state, counts = jax.block_until_ready(
-        snn.run_snn(state, raster, cfg, train=True))
-    compile_s = time.time() - t0
-    t0 = time.time()
-    state, counts = jax.block_until_ready(
-        snn.run_snn(state, raster, cfg, train=True))
-    run_s = time.time() - t0
+    net = cli.net_from_args(args)
+    cfg = cli.snn_config_from_args(args, net=net)
+    tcfg = cli.trainer_config_from_args(args)
+    sampler, n_classes = cli.sampler_for(net)
+    result = train_to_accuracy(cfg, sampler, n_classes, tcfg, verbose=True)
 
     # synaptic updates per step: every learnable layer touches its full
     # (fan_in × out) matrix per patch row
@@ -134,22 +127,26 @@ def run_snn_training(args) -> dict:
         rows = 1
         for d in out_shape[:-1] or (1,):
             rows *= d
-        updates += args.batch * rows * snn._fan_in(spec, in_shape) \
+        updates += tcfg.batch * rows * snn._fan_in(spec, in_shape) \
             * spec.out_features
+    run_s = result["train_seconds"]
     summary = {
-        "net": cfg.name, "rule": rule, "backend": args.backend,
-        "batch": args.batch,
-        "steps": args.steps,
-        "compile_seconds": round(compile_s, 3),
+        "net": cfg.name, "rule": cfg.rule, "backend": cfg.backend,
+        "batch": tcfg.batch,
+        "steps": result["sim_steps"],
+        "epochs": tcfg.epochs,
         "run_seconds": round(run_s, 4),
-        "sops_per_s": args.steps * updates / max(run_s, 1e-9),
-        "mean_rate": float(counts.mean()) / args.steps,
+        "sops_per_s": result["sim_steps"] * updates / max(run_s, 1e-9),
+        "mean_rate": result["mean_eval_rates"][-1],
+        "accuracy_curve": result["accuracy_curve"],
+        "final_accuracy": result["final_accuracy"],
+        "chance": result["chance"],
     }
-    print(f"snn training [{cfg.name} / {rule} / {args.backend}]: "
-          f"batch {args.batch} × "
-          f"{args.steps} steps — {summary['sops_per_s']:.3e} SOP/s "
-          f"(compile {compile_s:.2f}s, run {run_s:.3f}s, "
-          f"mean rate {summary['mean_rate']:.3f})", flush=True)
+    print(f"snn training [{cfg.name} / {cfg.rule} / {cfg.backend}]: "
+          f"batch {tcfg.batch} × {result['sim_steps']} steps — "
+          f"{summary['sops_per_s']:.3e} SOP/s (train {run_s:.2f}s incl. "
+          f"compile), accuracy {summary['final_accuracy']:.3f} "
+          f"(chance {summary['chance']:.3f})", flush=True)
     return summary
 
 
@@ -159,19 +156,13 @@ def main():
     ap.add_argument("--engine", action="store_true",
                     help="train the ITP-STDP learning engine instead of the "
                          "LM stack")
-    ap.add_argument("--snn", default=None,
-                    choices=("2layer-snn", "6layer-dcsnn", "5layer-csnn"),
-                    help="train one of the paper's SNNs instead of the LM "
-                         "stack (conv nets exercise the fused conv kernel)")
-    ap.add_argument("--rule", default="itp", choices=plasticity.rule_names(),
-                    help="learning rule (--engine and --snn modes); every "
-                         "rule runs on every --backend")
-    ap.add_argument("--backend", default="reference", choices=BACKENDS,
-                    help="weight-update datapath (--engine and --snn modes)")
-    ap.add_argument("--max-events", type=int, default=None,
-                    help="sparse backend: static event-list cap per side "
-                         "(default: uncapped; excess highest-indexed events "
-                         "are dropped)")
+    # SNN-mode flags come from the shared builder (repro.launch.cli) so
+    # this entry point and examples/train_snn.py declare them exactly once;
+    # --snn doubles as the mode switch (default None = LM/engine mode) and
+    # --batch is shared with the LM path (hence the LM default of 8)
+    cli.add_net_flag(ap, "--snn", default=None)
+    cli.add_update_flags(ap)
+    cli.add_train_flags(ap, batch_default=8)
     ap.add_argument("--engine-pre", type=int, default=256)
     ap.add_argument("--engine-post", type=int, default=256)
     ap.add_argument("--replicas", type=int, default=8)
@@ -181,7 +172,6 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-runnable)")
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--remat", choices=("none", "full", "dots"),
@@ -197,7 +187,7 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
-    if args.snn:
+    if args.net:
         run_snn_training(args)
         return
     if args.engine:

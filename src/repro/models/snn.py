@@ -84,22 +84,38 @@ class SNNConfig:
                                   # patch element); False keeps the unpacked
                                   # bitplane kernel operands (the oracle)
     inhibition: float = 0.0       # lateral inhibition strength (2-layer SNN)
+    hard_wta: bool = False        # hard winner-take-all: per sample (and
+                                  # spatial position) only the most-driven
+                                  # super-threshold neuron fires; the
+                                  # suppressed ones are shunt-inhibited
+                                  # (membrane reset).  Stacks on top of the
+                                  # soft `inhibition` current.
+    theta_plus: float = 0.0       # adaptive-threshold homeostasis: per-
+                                  # neuron threshold increment per spike
+                                  # (0 disables; θ is per output channel,
+                                  # persists across sample resets)
+    theta_tau: float = 200.0      # θ decay time constant (steps)
     stdp: STDPParams = dataclasses.field(default_factory=STDPParams)
     lif: LIFParams = dataclasses.field(
         default_factory=lambda: LIFParams(tau=2.0, v_th=0.6))
     izhi: IzhikevichParams = dataclasses.field(default_factory=IzhikevichParams)
 
     def __post_init__(self):
-        # config-construction-time validation of the rule × backend cell
-        # (unknown names list the valid options; kernel-less rules reject
-        # the fused* backends) and the rule's pairing support
-        rule = plasticity.get_rule(self.rule)
-        plasticity.resolve_rule_backend(rule, self.backend)
-        rule.check_pairing(self.pairing)
-        if self.max_events is not None and self.max_events < 1:
+        # config-construction-time validation of the rule × backend cell —
+        # the single shared validator (plasticity.validate_update_config)
+        # keeps messages and valid-option listings identical to
+        # EngineConfig's — plus the SNN-only homeostasis knobs
+        plasticity.validate_update_config(
+            rule=self.rule, backend=self.backend, pairing=self.pairing,
+            max_events=self.max_events)
+        if self.theta_plus < 0.0:
             raise ValueError(
-                f"max_events must be a positive event-list cap or None "
-                f"(uncapped), got {self.max_events}")
+                f"theta_plus must be >= 0 (0 disables homeostasis), "
+                f"got {self.theta_plus}")
+        if self.theta_tau <= 0.0:
+            raise ValueError(
+                f"theta_tau must be a positive decay time constant "
+                f"(steps), got {self.theta_tau}")
 
     def learning_rule(self) -> plasticity.LearningRule:
         return plasticity.get_rule(self.rule)
@@ -219,6 +235,11 @@ class LayerState(NamedTuple):
     neurons: Any                 # LIFState | IzhikevichState | None (pool)
     pre_hist: Any                # rule timing state (histories / counters)
     post_hist: Any
+    theta: Any = None            # adaptive-threshold homeostasis state:
+                                 # (out_features,) f32 per output channel
+                                 # (None for pool layers).  Persists across
+                                 # reset_dynamics — it is the slow
+                                 # homeostatic variable, not fast dynamics.
 
 
 class SNNState(NamedTuple):
@@ -265,6 +286,7 @@ def init_snn(key: jax.Array, cfg: SNNConfig, batch: int) -> SNNState:
                 neurons=_neuron_init(cfg, (batch,) + out_shape),
                 pre_hist=rule.init_state(n_pre, cfg.depth),
                 post_hist=rule.init_state(n_post, cfg.depth),
+                theta=jnp.zeros((spec.out_features,), jnp.float32),
             ))
         in_shape = out_shape
     return SNNState(weights=tuple(weights), layers=tuple(states))
@@ -477,11 +499,25 @@ def _learnable_step(spec: SNNLayerSpec, cfg: SNNConfig, w: jax.Array,
     else:
         out_shape = (B, out_l, w.shape[1])
     i_flat = i_in.reshape(out_shape)
+    # adaptive-threshold homeostasis: the per-output-channel θ raises each
+    # neuron's effective threshold, equalising firing rates so no subset of
+    # neurons captures every input (θ stays all-zero when theta_plus == 0,
+    # leaving the classic fixed-threshold trajectories untouched)
+    theta = st.theta if st.theta is not None else 0.0
     if cfg.neuron == "izhikevich":
-        neurons, spikes_out = izhikevich_step(st.neurons, cfg.izhi_gain * i_flat,
-                                              cfg.izhi)
+        neurons, spikes_out = izhikevich_step(
+            st.neurons, cfg.izhi_gain * i_flat, cfg.izhi, v_th_offset=theta)
     else:
-        neurons, spikes_out = lif_step(st.neurons, i_flat, cfg.lif)
+        neurons, spikes_out = lif_step(st.neurons, i_flat, cfg.lif,
+                                       v_th_offset=theta)
+    if cfg.hard_wta:
+        # hard WTA on top of the soft inhibition current: per sample (and
+        # spatial position) only the most-driven super-threshold neuron
+        # keeps its spike; the suppressed ones were already membrane-reset
+        # in the neuron step (shunt-inhibition semantics)
+        drive = jnp.where(spikes_out, i_flat, -jnp.inf)
+        winner = jnp.argmax(drive, axis=-1)[..., None]
+        spikes_out = spikes_out & (jnp.arange(i_flat.shape[-1]) == winner)
     s_out = spikes_out.astype(jnp.float32)
 
     # --- STDP update (dispatched through the selected LearningRule) -------
@@ -528,11 +564,22 @@ def _learnable_step(spec: SNNLayerSpec, cfg: SNNConfig, w: jax.Array,
         w = jnp.clip(w + cfg.eta * (dw_ltp - dw_ltd) / denom, 0.0, 1.0)
         w = _quantise(w, cfg)
 
+    # --- homeostasis θ update (training only; frozen during eval) ---------
+    theta_new = st.theta
+    if train and cfg.theta_plus > 0.0 and st.theta is not None:
+        # exponential decay towards 0 plus an increment proportional to
+        # each channel's firing rate this step (mean over batch + spatial
+        # positions, so the operating point is batch-size invariant)
+        rate = s_out.reshape(-1, s_out.shape[-1]).mean(axis=0)
+        theta_new = st.theta * jnp.exp(-1.0 / cfg.theta_tau) \
+            + cfg.theta_plus * rate
+
     # --- record new spikes (history shift-in / counter reset) ------------
     st = LayerState(
         neurons=neurons,
         pre_hist=rule.step(st.pre_hist, s_in.reshape(-1), depth=cfg.depth),
         post_hist=rule.step(st.post_hist, s_out.reshape(-1), depth=cfg.depth),
+        theta=theta_new,
     )
     return w, st, spikes_out
 
@@ -595,9 +642,14 @@ def run_snn(state: SNNState, raster: jax.Array, cfg: SNNConfig,
 
 
 def reset_dynamics(state: SNNState, cfg: SNNConfig, batch: int) -> SNNState:
-    """Zero neuron states + histories between samples; keep learned weights."""
+    """Zero neuron states + histories between samples; keep learned weights
+    AND the adaptive thresholds θ — homeostasis is the slow variable that
+    must integrate firing rates across samples, not within one raster."""
     fresh = init_snn(jax.random.PRNGKey(0), cfg, batch)
-    return SNNState(weights=state.weights, layers=fresh.layers)
+    layers = tuple(
+        f._replace(theta=old.theta) if old.theta is not None else f
+        for f, old in zip(fresh.layers, state.layers))
+    return SNNState(weights=state.weights, layers=layers)
 
 
 # ---------------------------------------------------------------------------

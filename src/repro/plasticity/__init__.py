@@ -11,6 +11,7 @@ from repro.plasticity.base import (
     resolve_rule_backend,
     rule_names,
     sparse_rule_names,
+    validate_update_config,
 )
 from repro.plasticity.rules import (
     EXACT,

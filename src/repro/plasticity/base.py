@@ -363,6 +363,34 @@ def sparse_rule_names() -> tuple[str, ...]:
     return tuple(sorted(n for n, r in RULES.items() if r.has_sparse))
 
 
+def validate_update_config(
+    *,
+    rule: str,
+    backend: str,
+    pairing: str,
+    max_events: int | None,
+) -> LearningRule:
+    """Single cross-field validator shared by ``EngineConfig`` and ``SNNConfig``.
+
+    Every constraint the two configs share lives here exactly once, so the
+    error messages (and their valid-option listings) cannot drift between
+    them: unknown rule/backend names list the registry options, kernel-less
+    rules reject the ``fused*`` backends, rules without event hooks reject
+    ``sparse``, counter rules reject ``pairing="all"``, and ``max_events``
+    must be a positive cap or ``None``.  Returns the resolved rule so
+    callers avoid a second registry lookup.
+    """
+    resolved = get_rule(rule)
+    resolve_rule_backend(resolved, backend)
+    resolved.check_pairing(pairing)
+    if max_events is not None and max_events < 1:
+        raise ValueError(
+            f"max_events must be a positive event-list cap or None "
+            f"(uncapped), got {max_events}"
+        )
+    return resolved
+
+
 def resolve_rule_backend(rule: str | LearningRule, backend: str) -> tuple[bool, bool]:
     """Validate a (rule, backend) cell and map it to (use_kernel, interpret).
 

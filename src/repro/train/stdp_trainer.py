@@ -1,0 +1,271 @@
+"""Unsupervised STDP training-to-accuracy loop (the paper's system-level
+protocol behind Table II).
+
+The pipeline is the classic unsupervised-STDP classifier recipe (Diehl &
+Cook style, cf. the paired-competition analysis of Goupy et al. in
+PAPERS.md), wired through this repo's rule-owned dispatch so every cell of
+the rule × backend matrix trains end-to-end:
+
+  1. **Feature learning** — epochs of rate-coded batches streamed from
+     ``repro.data.pipeline.spike_stream`` (double-buffered via
+     ``Prefetcher``) drive ``snn.run_snn(train=True)``; the excitatory
+     layer competes through soft lateral inhibition / hard WTA and
+     adaptive-threshold homeostasis (``SNNConfig.hard_wta`` /
+     ``theta_plus`` / ``theta_tau``), which is what turns local STDP into
+     class-selective receptive fields.
+  2. **Label assignment** — a held-out pass (``train=False``, θ and
+     weights frozen) records per-neuron spike counts; each excitatory
+     neuron is assigned to the class it responds to most
+     (:func:`assign_labels`).
+  3. **Evaluation** — a second held-out pass classifies each sample by
+     the assigned-population vote (:func:`assignment_predict`): argmax
+     over classes of the mean spike count of the neurons assigned to that
+     class.
+
+No gradients, no labels in the weight path — the only supervised step is
+naming the neurons.  :func:`train_to_accuracy` runs the loop and returns
+the per-epoch accuracy curve; ``benchmarks/accuracy.py`` uses it to pin
+the paper's claim that ITP-STDP matches exact STDP *accuracy*, not just
+trajectories.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import Prefetcher, encode_batch, spike_stream
+from repro.models import snn
+
+Sampler = Callable[[jax.Array, int], tuple[jax.Array, jax.Array]]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    """Epoch-level knobs of the train-to-accuracy loop.
+
+    One epoch = ``batches_per_epoch`` rasters of ``batch`` samples ×
+    ``t_steps`` simulation steps, followed by an assignment pass
+    (``assign_batches``) and an evaluation pass (``eval_batches``) on
+    freshly drawn held-out samples.  All batches share one size so the
+    jitted ``run_snn`` compiles exactly twice (train / eval variant).
+    """
+
+    epochs: int = 5
+    batches_per_epoch: int = 8
+    batch: int = 16
+    t_steps: int = 30
+    assign_batches: int = 6
+    eval_batches: int = 4
+    seed: int = 0
+    prefetch: bool = True
+
+    def __post_init__(self):
+        for name in (
+            "epochs",
+            "batches_per_epoch",
+            "batch",
+            "t_steps",
+            "assign_batches",
+            "eval_batches",
+        ):
+            v = getattr(self, name)
+            if v < 1:
+                raise ValueError(f"{name} must be >= 1, got {v}")
+
+
+# ---------------------------------------------------------------------------
+# Label-assignment evaluator
+# ---------------------------------------------------------------------------
+
+
+def assign_labels(counts: jax.Array, labels: jax.Array, n_classes: int) -> jax.Array:
+    """Assign each feature neuron to its max-mean-response class.
+
+    ``counts`` is ``(N, F)`` spike counts over a held-out pass, ``labels``
+    ``(N,)`` int; returns ``(F,)`` int32 assignments.  Neurons that never
+    fire fall to class 0 (they carry no vote weight either way).
+    """
+    onehot = jax.nn.one_hot(labels, n_classes, dtype=jnp.float32)  # (N, C)
+    per_class = onehot.T @ jnp.asarray(counts, jnp.float32)  # (C, F)
+    per_class = per_class / jnp.maximum(onehot.sum(axis=0)[:, None], 1.0)
+    return jnp.argmax(per_class, axis=0).astype(jnp.int32)
+
+
+def assignment_predict(
+    counts: jax.Array,
+    assignments: jax.Array,
+    n_classes: int,
+) -> jax.Array:
+    """Classify by assigned-population vote.
+
+    Per sample, each class scores the *mean* spike count of the neurons
+    assigned to it (mean, not sum, so a class owning many neurons gets no
+    free advantage); returns ``(N,)`` int32 predictions.
+    """
+    onehot = jax.nn.one_hot(assignments, n_classes, dtype=jnp.float32)  # (F, C)
+    pop = jnp.maximum(onehot.sum(axis=0), 1.0)  # (C,)
+    votes = jnp.asarray(counts, jnp.float32) @ onehot / pop  # (N, C)
+    return jnp.argmax(votes, axis=-1).astype(jnp.int32)
+
+
+def assignment_accuracy(
+    counts: jax.Array,
+    labels: jax.Array,
+    assignments: jax.Array,
+    n_classes: int,
+) -> float:
+    pred = assignment_predict(counts, assignments, n_classes)
+    return float(jnp.mean(pred == labels))
+
+
+# ---------------------------------------------------------------------------
+# Held-out feature collection + evaluation
+# ---------------------------------------------------------------------------
+
+
+def _collect_counts(
+    state: snn.SNNState,
+    cfg: snn.SNNConfig,
+    sampler: Sampler,
+    key: jax.Array,
+    *,
+    n_batches: int,
+    batch: int,
+    t_steps: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Frozen-network spike counts over ``n_batches`` held-out batches."""
+    feats, labels = [], []
+    st = state
+    for _ in range(n_batches):
+        key, k_data, k_enc = jax.random.split(key, 3)
+        x, y = sampler(k_data, batch)
+        spikes = encode_batch(k_enc, x, t_steps)
+        st = snn.reset_dynamics(st, cfg, batch)
+        st, counts = snn.run_snn(st, spikes, cfg, train=False)
+        feats.append(counts)
+        labels.append(y)
+    return jnp.concatenate(feats), jnp.concatenate(labels)
+
+
+def evaluate(
+    state: snn.SNNState,
+    cfg: snn.SNNConfig,
+    sampler: Sampler,
+    n_classes: int,
+    tcfg: TrainerConfig,
+    key: jax.Array,
+) -> dict:
+    """Label-assignment evaluation of a trained network.
+
+    Assignment and evaluation use disjoint key folds, so the reported
+    accuracy is a true held-out number for the assignment too.
+    """
+    k_assign, k_eval = jax.random.split(key)
+    counts_a, labels_a = _collect_counts(
+        state,
+        cfg,
+        sampler,
+        k_assign,
+        n_batches=tcfg.assign_batches,
+        batch=tcfg.batch,
+        t_steps=tcfg.t_steps,
+    )
+    assignments = assign_labels(counts_a, labels_a, n_classes)
+    counts_e, labels_e = _collect_counts(
+        state,
+        cfg,
+        sampler,
+        k_eval,
+        n_batches=tcfg.eval_batches,
+        batch=tcfg.batch,
+        t_steps=tcfg.t_steps,
+    )
+    acc = assignment_accuracy(counts_e, labels_e, assignments, n_classes)
+    return {
+        "accuracy": acc,
+        "assignments": assignments,
+        "n_assigned_classes": int(jnp.unique(assignments).shape[0]),
+        "mean_eval_rate": float(counts_e.mean()) / tcfg.t_steps,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Epoch-level training loop
+# ---------------------------------------------------------------------------
+
+
+def train_to_accuracy(
+    cfg: snn.SNNConfig,
+    sampler: Sampler,
+    n_classes: int,
+    tcfg: TrainerConfig,
+    *,
+    verbose: bool = False,
+) -> dict:
+    """Unsupervised STDP epochs + per-epoch label-assignment accuracy.
+
+    Streams ``spike_stream`` batches (prefetched when ``tcfg.prefetch``)
+    through ``run_snn(train=True)`` with dynamics reset between rasters,
+    then evaluates after every epoch.  Works for every valid rule ×
+    backend cell of the matrix — the loop only touches the config-level
+    dispatch.  Returns the result dict (accuracy curve + final state
+    diagnostics); the trained state rides along under ``"state"``.
+    """
+    key = jax.random.PRNGKey(tcfg.seed)
+    state = snn.init_snn(key, cfg, tcfg.batch)
+    curve, rates = [], []
+    train_seconds = 0.0
+    for epoch in range(tcfg.epochs):
+        k_epoch = jax.random.fold_in(key, 1000 + epoch)
+        stream = spike_stream(
+            k_epoch,
+            sampler,
+            batch=tcfg.batch,
+            t_steps=tcfg.t_steps,
+            n_steps=tcfg.batches_per_epoch,
+        )
+        if tcfg.prefetch:
+            stream = Prefetcher(stream)
+        t0 = time.time()
+        try:
+            for b in stream:
+                state, _ = snn.run_snn(state, b["spikes"], cfg, train=True)
+                state = snn.reset_dynamics(state, cfg, tcfg.batch)
+            jax.block_until_ready(state.weights)
+        finally:
+            if isinstance(stream, Prefetcher):
+                stream.close()
+        train_seconds += time.time() - t0
+        k_eval = jax.random.fold_in(key, 2000 + epoch)
+        ev = evaluate(state, cfg, sampler, n_classes, tcfg, k_eval)
+        curve.append(ev["accuracy"])
+        rates.append(ev["mean_eval_rate"])
+        if verbose:
+            print(
+                f"  epoch {epoch + 1:2d}/{tcfg.epochs}: "
+                f"accuracy {ev['accuracy']:.3f} "
+                f"(rate {ev['mean_eval_rate']:.3f}, "
+                f"{ev['n_assigned_classes']}/{n_classes} classes assigned)",
+                flush=True,
+            )
+    sim_steps = tcfg.epochs * tcfg.batches_per_epoch * tcfg.t_steps
+    return {
+        "net": cfg.name,
+        "rule": cfg.rule,
+        "backend": cfg.backend,
+        "epochs": tcfg.epochs,
+        "batch": tcfg.batch,
+        "t_steps": tcfg.t_steps,
+        "sim_steps": sim_steps,
+        "chance": 1.0 / n_classes,
+        "accuracy_curve": [float(a) for a in curve],
+        "final_accuracy": float(curve[-1]),
+        "mean_eval_rates": [float(r) for r in rates],
+        "train_seconds": round(train_seconds, 3),
+        "state": state,
+    }

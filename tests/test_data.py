@@ -102,3 +102,34 @@ def test_prefetcher_preserves_order():
     pf = Prefetcher(it, depth=3)
     out = [int(b["i"]) for b in pf]
     assert out == list(range(20))
+
+
+def test_prefetcher_matches_unprefetched_spike_stream(key):
+    """Prefetching is a pure latency optimisation: same batches, same order."""
+    sampler = lambda k, n: synthetic_digits(k, n)  # noqa: E731
+    plain = list(spike_stream(key, sampler, batch=4, t_steps=6, n_steps=5))
+    with Prefetcher(spike_stream(key, sampler, batch=4, t_steps=6,
+                                 n_steps=5)) as pf:
+        fetched = list(pf)
+    assert len(fetched) == len(plain)
+    for a, b in zip(plain, fetched):
+        np.testing.assert_array_equal(np.asarray(a["spikes"]),
+                                      np.asarray(b["spikes"]))
+        np.testing.assert_array_equal(np.asarray(a["labels"]),
+                                      np.asarray(b["labels"]))
+
+
+def test_prefetcher_close_shuts_down_cleanly():
+    """Early abandonment must stop the fill thread, not leak it."""
+    def slow_source():
+        for i in range(1000):
+            yield {"i": i}
+
+    pf = Prefetcher(slow_source(), depth=2)
+    first = next(pf)
+    assert int(first["i"]) == 0
+    pf.close()
+    assert not pf._thread.is_alive()
+    # idempotent, and a closed prefetcher raises StopIteration not a hang
+    pf.close()
+    assert list(pf) == []

@@ -306,15 +306,21 @@ def test_counter_engine_aliases_stay_green(key):
                                      init_counter_engine,
                                      run_counter_engine)
 
-    cfg = CounterEngineConfig(n_pre=12, n_post=8, window=7)
+    # every alias is deprecated and must say where to go instead …
+    with pytest.warns(DeprecationWarning, match=r"rule='exact'"):
+        cfg = CounterEngineConfig(n_pre=12, n_post=8, window=7)
     assert isinstance(cfg, EngineConfig)
     assert cfg.rule == "exact" and cfg.depth == 8
-    state = init_counter_engine(key, cfg)
+    with pytest.warns(DeprecationWarning, match="init_engine"):
+        state = init_counter_engine(key, cfg)
     train = jax.random.bernoulli(key, 0.4, (25, 12))
-    s_alias, post_alias = run_counter_engine(state, train, cfg)
+    with pytest.warns(DeprecationWarning, match="run_engine"):
+        s_alias, post_alias = run_counter_engine(state, train, cfg)
     # single-step alias too
-    s1, p1 = counter_engine_step(state, train[0], cfg)
+    with pytest.warns(DeprecationWarning, match="engine_step"):
+        s1, p1 = counter_engine_step(state, train[0], cfg)
     assert p1.shape == (8,)
+    # … but the deprecated path must still compute the registry path
     # the shim is the unified engine: same trajectory as the direct config
     direct = EngineConfig(n_pre=12, n_post=8, depth=8, rule="exact")
     s_direct, post_direct = run_engine(init_engine(key, direct), train,
@@ -328,5 +334,6 @@ def test_counter_engine_aliases_stay_green(key):
 def test_counter_engine_aliases_reject_wrong_rule(key):
     from repro.core.baseline import init_counter_engine
 
-    with pytest.raises(ValueError, match="exact"):
+    with pytest.warns(DeprecationWarning), \
+         pytest.raises(ValueError, match="exact"):
         init_counter_engine(key, EngineConfig(rule="itp"))
