@@ -19,6 +19,9 @@ it exercises):
     sparse_cost       — event-driven sparse backend: speedup vs spike
                         density + sparse/dense crossover
     roofline          — §Roofline terms from the dry-run artifacts
+    static_audit      — jaxpr contract audit fingerprint: per-cell
+                        primitive counts of the traced rule × backend ×
+                        layer-kind matrix (no execution; CI diffs it)
 
 ``--only <name>`` runs a single module; ``--quick`` shrinks the
 protocols for CI-speed runs; ``--list`` prints the registered module
@@ -109,6 +112,12 @@ def _run_roofline(args):
     return {"cells": len(r["rows"]), "missing": len(r["missing"])}
 
 
+def _run_static_audit(args):
+    from benchmarks import static_audit
+    r = static_audit.run(args.out, quick=args.quick)
+    return {"n_cells": r["n_cells"], "n_violating": r["n_violating"]}
+
+
 # name → runner; insertion order is execution order.  --only choices,
 # --list, and the dispatch loop below all read THIS dict — add a module
 # here and every CLI surface picks it up.
@@ -122,6 +131,7 @@ MODULES = {
     "conv_cost": _run_conv_cost,
     "sparse_cost": _run_sparse_cost,
     "roofline": _run_roofline,
+    "static_audit": _run_static_audit,
 }
 
 

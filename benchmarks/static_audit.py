@@ -1,0 +1,51 @@
+"""Static jaxpr fingerprint of the rule × backend × layer-kind matrix.
+
+Runs the layer-2 contract audit (``repro.analysis.jaxpr_audit``) and
+records the per-cell primitive-count table into the tracked
+``BENCH_static.json`` — a host-independent cost fingerprint: unlike the
+wall-clock benchmarks, the traced-graph size only moves when the code
+(or the jax version) changes, so CI can diff it to catch silent graph
+bloat or a cell dropping out of the matrix.  Quick mode writes
+``BENCH_static.quick.json`` (same content — the audit is already
+CI-cheap; the split keeps artifact handling uniform with the other
+benchmarks).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.bench_io import update_bench_json
+from repro.analysis.jaxpr_audit import run_audit
+
+
+def run(out_dir: str, quick: bool = False, verbose: bool = True) -> dict:
+    report = run_audit()
+    out = {
+        "jax_version": report["jax_version"],
+        "n_cells": report["n_cells"],
+        "n_violating": report["n_violating"],
+        "cells": report["cells"],
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "static_audit.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    bench_name = "BENCH_static.quick.json" if quick else "BENCH_static.json"
+    update_bench_json(bench_name, {"static_audit": out})
+    if verbose:
+        print(f"— static jaxpr audit ({out['n_cells']} cells, jax {out['jax_version']}) —")
+        cols = f"{'rule':>10} {'backend':>16} {'kind':>7} {'eqns':>5} {'uint8':>5} {'viol':>4}"
+        print(f"  {cols}")
+        for c in out["cells"]:
+            row = (
+                f"{c['rule']:>10s} {c['backend']:>16s} {c['kind']:>7s} "
+                f"{c.get('n_eqns', 0):5d} {str(c.get('has_uint8', False)):>5s} "
+                f"{len(c['violations']):4d}"
+            )
+            print(f"  {row}")
+    if report["n_violating"]:
+        raise SystemExit(
+            f"static audit: {report['n_violating']} cell(s) violate the "
+            "dataflow contracts — run `python -m tools.check --audit`"
+        )
+    return out

@@ -1,0 +1,32 @@
+"""repro-lint: static analysis enforcing the repo's hardware contracts.
+
+Two layers (ROADMAP "Invariants (machine-checked)"):
+
+* :mod:`repro.analysis.astlint` + :mod:`repro.analysis.importgraph` —
+  AST-level rules R1–R7 over the source tree (no imports executed).
+* :mod:`repro.analysis.jaxpr_audit` — traces every valid rule × backend
+  × layer-kind cell of the ROADMAP matrix abstractly and checks the
+  jaxprs against the paper's dataflow contracts (uint8 operands, no
+  float64, static shapes), recording a host-independent primitive-count
+  fingerprint.
+
+Driven by ``python -m tools.check``; the committed baseline lives in
+``tools/check_allowlist.json`` and only ever ratchets down.
+"""
+from repro.analysis.allowlist import apply_allowlist, load_allowlist, render_allowlist
+from repro.analysis.astlint import AST_RULES, RULE_EXPLAIN, Finding, run_ast_rules
+from repro.analysis.importgraph import run_import_graph
+from repro.analysis.lint import ALL_RULES, run_lint
+
+__all__ = [
+    "ALL_RULES",
+    "AST_RULES",
+    "RULE_EXPLAIN",
+    "Finding",
+    "apply_allowlist",
+    "load_allowlist",
+    "render_allowlist",
+    "run_ast_rules",
+    "run_import_graph",
+    "run_lint",
+]

@@ -1,0 +1,67 @@
+"""Allowlisted-baseline handling: the gate ratchets down, never up.
+
+``tools/check_allowlist.json`` maps each rule to a list of entries:
+
+* R1–R6 — ``{"file": "<repo-relative path>", "justification": "..."}``
+* R7    — ``{"module": "<dotted module>", "justification": "..."}``
+
+:func:`apply_allowlist` splits a finding list into NEW findings (not in
+the baseline → fail) and reports STALE entries (baselined but no longer
+found → fail too, so the file has to shrink with the fixes).  Every
+entry must carry a non-empty justification.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.analysis.astlint import Finding
+
+
+def load_allowlist(path: Path) -> dict[str, list[dict]]:
+    if not path.exists():
+        return {}
+    text = path.read_text()
+    if not text.strip():  # e.g. --allowlist /dev/null
+        return {}
+    data = json.loads(text)
+    if not isinstance(data, dict):
+        raise ValueError(f"{path}: allowlist must be a JSON object")
+    for rule, entries in data.items():
+        key = "module" if rule == "R7" else "file"
+        for e in entries:
+            if not isinstance(e, dict) or key not in e:
+                raise ValueError(f"{path}: {rule} entry {e!r} missing {key!r}")
+            if not str(e.get("justification", "")).strip():
+                raise ValueError(f"{path}: {rule} entry {e[key]!r} lacks a justification")
+    return data
+
+
+def _entry_key(rule: str, entry: dict) -> tuple[str, str]:
+    return rule, entry["module" if rule == "R7" else "file"]
+
+
+def apply_allowlist(
+    findings: list[Finding],
+    allow: dict[str, list[dict]],
+) -> tuple[list[Finding], list[tuple[str, str]]]:
+    """→ (new findings not covered by the baseline, stale baseline keys)."""
+    allowed = {_entry_key(rule, e) for rule, entries in allow.items() for e in entries}
+    found = {(f.rule, f.key()) for f in findings}
+    new = [f for f in findings if (f.rule, f.key()) not in allowed]
+    stale = sorted(allowed - found)
+    return new, stale
+
+
+def render_allowlist(findings: list[Finding], previous: dict[str, list[dict]]) -> str:
+    """Regenerate the baseline from current findings (``--update-allowlist``),
+    carrying over justifications for entries that persist."""
+    just = {_entry_key(r, e): e["justification"] for r, es in previous.items() for e in es}
+    out: dict[str, list[dict]] = {}
+    for f in sorted(findings):
+        key = "module" if f.rule == "R7" else "file"
+        justification = just.get((f.rule, f.key()), "TODO: justify or fix")
+        entry = {key: f.key(), "justification": justification}
+        if entry not in out.setdefault(f.rule, []):
+            out[f.rule].append(entry)
+    return json.dumps(out, indent=2) + "\n"

@@ -1,0 +1,22 @@
+"""Combined lint runner: AST rules R1–R6 + the R7 import graph."""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterable
+
+from repro.analysis.astlint import AST_RULES, Finding, run_ast_rules
+from repro.analysis.importgraph import run_import_graph
+
+ALL_RULES = tuple(AST_RULES) + ("R7",)
+
+
+def run_lint(root: Path, rules: Iterable[str] = ()) -> list[Finding]:
+    rules = tuple(rules or ALL_RULES)
+    unknown = set(rules) - set(ALL_RULES)
+    if unknown:
+        raise ValueError(f"unknown rules {sorted(unknown)}; have {ALL_RULES}")
+    ast_rules = [r for r in rules if r in AST_RULES]
+    findings = run_ast_rules(root, ast_rules)
+    if "R7" in rules:
+        findings += run_import_graph(root)
+    return sorted(findings)

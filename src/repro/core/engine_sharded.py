@@ -28,7 +28,7 @@ from repro.core.engine import EngineConfig, EngineState, _quantise
 from repro.core.lif import LIFState, lif_step
 from repro.core.stdp import pair_gate
 from repro.distributed.sharding import shard_map_compat
-from repro.kernels.itp_sparse.events import event_cap, spike_events
+from repro.kernels.dispatch import event_cap, spike_events
 
 
 def shard_engine_state(state: EngineState, mesh: Mesh,

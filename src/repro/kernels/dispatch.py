@@ -20,11 +20,45 @@ pair the per-package ``ops.py`` wrappers take; ``sparse`` is *not* a
 Pallas path, so it maps to ``(False, False)`` and consumers branch on
 the backend name explicitly.  The lane/tile padding helpers live here
 too so each kernel package stops re-deriving them.
+
+This module is also the only sanctioned surface through which code
+*outside* ``repro.kernels`` / ``repro.plasticity`` touches the
+``repro.kernels.itp_*`` packages (lint rule R2, ``tools/check.py``):
+the rule-neutral helpers those packages export — the static-shape
+event-list primitives of ``itp_sparse.events`` and the im2col layout
+helpers of ``itp_stdp_conv.ops`` — re-export here lazily (PEP 562
+``__getattr__``, so importing ``dispatch`` from inside a kernel package
+never cycles), and the engines/models import *this* module instead of
+reaching into a kernel package directly.
 """
 from __future__ import annotations
 
+import importlib
+
 import jax
 import jax.numpy as jnp
+
+# name → defining module for the sanctioned kernel-package re-exports;
+# resolved lazily on first attribute access and cached in globals()
+_KERNEL_REEXPORTS = {
+    "event_cap": "repro.kernels.itp_sparse.events",
+    "spike_events": "repro.kernels.itp_sparse.events",
+    "word_events": "repro.kernels.itp_sparse.events",
+    "im2col_1d": "repro.kernels.itp_stdp_conv.ops",
+    "im2col_2d": "repro.kernels.itp_stdp_conv.ops",
+    "im2col_words_1d": "repro.kernels.itp_stdp_conv.ops",
+    "im2col_words_2d": "repro.kernels.itp_stdp_conv.ops",
+}
+
+
+def __getattr__(name: str):
+    target = _KERNEL_REEXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(importlib.import_module(target), name)
+    globals()[name] = value  # cache: later lookups skip __getattr__
+    return value
+
 
 LANE = 128
 SUBLANE = 8

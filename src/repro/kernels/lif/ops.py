@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lif import LIFParams, LIFState
-from repro.kernels.dispatch import LANE
+from repro.kernels.dispatch import LANE, default_interpret
 from repro.kernels.dispatch import round_up as _round_up
 from repro.kernels.lif.kernel import lif_update
 from repro.kernels.lif.ref import lif_update_ref
@@ -13,12 +13,17 @@ from repro.kernels.lif.ref import lif_update_ref
 
 def lif_step_kernel(state: LIFState, i_in: jax.Array, p: LIFParams,
                     *, use_kernel: bool = True,
-                    interpret: bool = True) -> tuple[LIFState, jax.Array]:
+                    interpret: bool | None = None
+                    ) -> tuple[LIFState, jax.Array]:
     """Kernel-backed drop-in for ``repro.core.lif.lif_step``.
 
     Accepts 1-D (n,) or 2-D (batch, n) membrane state; pads the neuron axis
-    to a lane multiple for the TPU layout.
+    to a lane multiple for the TPU layout.  ``interpret=None`` resolves via
+    ``dispatch.default_interpret`` (lint rule R3: ops wrappers must not bake
+    a literal interpreter default that ignores the host).
     """
+    if interpret is None:
+        interpret = default_interpret()
     v = state.v
     squeeze = v.ndim == 1
     if squeeze:

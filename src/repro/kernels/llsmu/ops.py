@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import default_interpret
 from repro.kernels.llsmu.kernel import llsmu_multiply
 from repro.kernels.llsmu.ref import llsmu_multiply_ref
 
@@ -12,8 +13,14 @@ LANE = 128
 
 def llsmu(a: jax.Array, b: jax.Array, *, n_bits: int = 4,
           frac_bits: int = 12, c: float = 0.08333,
-          use_kernel: bool = True, interpret: bool = True) -> jax.Array:
-    """Signed LLSMu approximate multiply, any (broadcastable-equal) shape."""
+          use_kernel: bool = True,
+          interpret: bool | None = None) -> jax.Array:
+    """Signed LLSMu approximate multiply, any (broadcastable-equal) shape.
+
+    ``interpret=None`` resolves via ``dispatch.default_interpret`` (R3).
+    """
+    if interpret is None:
+        interpret = default_interpret()
     a = jnp.asarray(a, jnp.int32)
     b = jnp.asarray(b, jnp.int32)
     if a.shape != b.shape:

@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import default_interpret
 from repro.kernels.po2_quant.kernel import po2_decode, po2_encode
 from repro.kernels.po2_quant.ref import po2_decode_ref, po2_encode_ref
 
@@ -11,13 +12,16 @@ LANE = 128
 
 
 def po2_quantize(x: jax.Array, *, use_kernel: bool = False,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool | None = None) -> jax.Array:
     """Round every element to the nearest power of two (sign preserved).
 
     ``use_kernel=False`` (default) uses the jnp path — the quantiser is
     memory-bound and XLA fuses it into the surrounding collective; the
     Pallas path exists to pin the VMEM tiling on real TPU and for tests.
+    ``interpret=None`` resolves via ``dispatch.default_interpret`` (R3).
     """
+    if interpret is None:
+        interpret = default_interpret()
     if not use_kernel:
         return po2_decode_ref(po2_encode_ref(x))
     shape = x.shape

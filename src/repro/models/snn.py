@@ -40,9 +40,8 @@ from repro import plasticity
 from repro.core.lif import (IzhikevichParams, LIFParams, izhikevich_init,
                             izhikevich_step, lif_init, lif_step)
 from repro.core.stdp import STDPParams
-from repro.kernels.dispatch import resolve_backend
-from repro.kernels.itp_stdp_conv.ops import (im2col_1d, im2col_2d,
-                                             im2col_words_1d, im2col_words_2d)
+from repro.kernels.dispatch import (im2col_1d, im2col_2d, im2col_words_1d,
+                                    im2col_words_2d, resolve_backend)
 
 
 # ---------------------------------------------------------------------------

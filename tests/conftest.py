@@ -3,6 +3,11 @@ override lives ONLY in repro.launch.dryrun (never set globally here)."""
 import jax
 import pytest
 
+# the lint-fixture tree holds deliberate violations (including a direct
+# `import hypothesis`); it is linted via --root by test_analysis.py, never
+# collected as tests
+collect_ignore = ["fixtures"]
+
 
 @pytest.fixture
 def key():

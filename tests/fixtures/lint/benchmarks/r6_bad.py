@@ -1,0 +1,7 @@
+"""Fixture: R6 violation — raw write of a tracked BENCH_ artifact."""
+import json
+
+
+def save(data):
+    with open("BENCH_fixture.json", "w") as f:
+        json.dump(data, f)

@@ -1,0 +1,10 @@
+"""Fixture: R6 clean twin — merged read-modify-write via bench_io."""
+import json
+
+from benchmarks.bench_io import update_bench_json
+
+
+def save(data, out_path):
+    update_bench_json("BENCH_fixture.json", {"fixture": data})
+    with open(out_path, "w") as f:      # per-run out-dir file: allowed
+        json.dump(data, f)

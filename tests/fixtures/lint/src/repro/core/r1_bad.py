@@ -1,0 +1,6 @@
+"""Fixture: R1 violation — raw shard_map outside the compat shim."""
+import jax
+
+
+def pod_mean(f, mesh, spec):
+    return jax.shard_map(f, mesh=mesh, in_specs=spec, out_specs=spec)

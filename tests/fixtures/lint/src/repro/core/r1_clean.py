@@ -1,0 +1,6 @@
+"""Fixture: R1 clean twin — routes through the version shim."""
+from repro.distributed.sharding import shard_map_compat
+
+
+def pod_mean(f, mesh, spec):
+    return shard_map_compat(f, mesh=mesh, in_specs=spec, out_specs=spec)

@@ -1,0 +1,6 @@
+"""Fixture: R2 violation — direct kernel-package import from core."""
+from repro.kernels.itp_sparse.events import spike_events
+
+
+def events(spikes, cap):
+    return spike_events(spikes, cap)

@@ -1,0 +1,6 @@
+"""Fixture: R2 clean twin — the sanctioned dispatch re-export."""
+from repro.kernels.dispatch import spike_events
+
+
+def events(spikes, cap):
+    return spike_events(spikes, cap)

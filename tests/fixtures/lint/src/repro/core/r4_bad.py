@@ -1,0 +1,7 @@
+"""Fixture: R4 violation — data-dependent one-arg jnp.where."""
+import jax.numpy as jnp
+
+
+def event_indices(spikes):
+    (idx,) = jnp.where(spikes != 0)
+    return idx

@@ -1,0 +1,9 @@
+"""Fixture: R4 clean twin — static-size event extraction."""
+import jax.numpy as jnp
+
+
+def event_indices(spikes, cap):
+    n = spikes.shape[0]
+    (idx,) = jnp.where(spikes != 0, size=cap, fill_value=n)
+    sel = jnp.where(idx < n, idx, n)           # 3-arg select: static shape
+    return sel

@@ -1,0 +1,12 @@
+"""Fixture: R3 — one literal interpret default (bad) + the None form."""
+from repro.kernels.dispatch import default_interpret
+
+
+def fake_op_bad(x, *, interpret: bool = True):
+    return x if interpret else -x
+
+
+def fake_op_clean(x, *, interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
+    return x if interpret else -x

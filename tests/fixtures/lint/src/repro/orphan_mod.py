@@ -1,0 +1,5 @@
+"""Fixture: R7 orphan — no entry point imports this module."""
+
+
+def unused():
+    return 42

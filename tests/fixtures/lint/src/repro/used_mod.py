@@ -1,0 +1,5 @@
+"""Fixture: R7 clean twin — reachable from the launch entry point."""
+
+
+def used():
+    return 7

@@ -1,0 +1,7 @@
+"""Fixture: R5 violation — direct hypothesis import in a test module."""
+from hypothesis import given, strategies as st
+
+
+@given(st.integers())
+def test_identity(x):
+    assert x == x

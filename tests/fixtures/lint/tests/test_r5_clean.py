@@ -1,0 +1,7 @@
+"""Fixture: R5 clean twin — goes through the compat shim."""
+from _hypothesis_compat import given, st
+
+
+@given(st.integers())
+def test_identity(x):
+    assert x == x

@@ -150,6 +150,40 @@ def test_shard_map_compat_single_device():
     np.testing.assert_allclose(np.asarray(out2), np.asarray(x), rtol=1e-6)
 
 
+def test_train_step_multipod_traces_on_this_toolchain(key):
+    """The multi-pod train-step branch must trace on the pinned jax.
+
+    Regression for the lint suite's first real catch (rule R1):
+    ``train_step`` called ``jax.shard_map`` directly, which does not
+    exist on jax 0.4.37 — the pod branch raised ``AttributeError`` the
+    moment a mesh with a ``pod`` axis was passed.  Tracing abstractly
+    via ``eval_shape`` exercises exactly that branch without running it.
+    """
+    from repro.configs import get_smoke_config
+    from repro.distributed.sharding import use_mesh
+    from repro.models import transformer
+    from repro.train import OptimizerConfig, TrainConfig, make_train_step
+    from repro.train.optimizer import init_opt_state
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    opt_cfg = OptimizerConfig(total_steps=2)
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    with use_mesh(mesh):
+        step = make_train_step(cfg, opt_cfg, TrainConfig(remat="none"), mesh)
+        params = jax.eval_shape(
+            lambda k: transformer.init_model(k, cfg), key)
+        opt = jax.eval_shape(init_opt_state, params)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((2, 16), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((2, 16), jnp.int32),
+        }
+        new_params, new_opt, metrics = jax.eval_shape(step, params, opt,
+                                                      batch)
+    assert metrics["loss"].shape == ()
+    assert jax.tree_util.tree_structure(new_params) \
+        == jax.tree_util.tree_structure(params)
+
+
 # ---------------------------------------------------------------------------
 # Multi-device semantics (subprocess; 8 forced host devices)
 # ---------------------------------------------------------------------------

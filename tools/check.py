@@ -1,0 +1,104 @@
+"""repro-lint CLI: ``python -m tools.check`` from the repo root.
+
+Layers:
+
+* default / ``--lint``  — AST rules R1–R6 + R7 import-graph dead-code
+  report, gated against the committed baseline
+  ``tools/check_allowlist.json`` (new finding → fail; stale baseline
+  entry → fail; the file only ratchets down).
+* ``--audit``           — jaxpr contract audit: trace every valid
+  rule × backend × layer-kind matrix cell abstractly and check the
+  dataflow contracts (uint8 operands, no float64).  Slower (imports
+  jax and traces ~50 cells); CI runs it via the ``static_audit``
+  benchmark too, which records the primitive-count fingerprint.
+* ``--all``             — both layers (the CI gate).
+
+``--explain R3`` prints a rule's rationale; ``--update-allowlist``
+regenerates the baseline from the current findings, keeping existing
+justifications.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT / "src") not in sys.path:  # plain `python -m tools.check`
+    sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis import (  # noqa: E402
+    ALL_RULES,
+    RULE_EXPLAIN,
+    apply_allowlist,
+    load_allowlist,
+    render_allowlist,
+    run_lint,
+)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools.check",
+        description="static-analysis gate for the repo's hardware contracts",
+    )
+    ap.add_argument("--all", action="store_true", help="run both layers (lint + jaxpr audit)")
+    ap.add_argument("--lint", action="store_true", help="run the lint layer (default)")
+    ap.add_argument("--audit", action="store_true", help="run the jaxpr contract audit layer")
+    ap.add_argument("--rules", nargs="*", default=[], metavar="R", help="restrict lint to rules")
+    ap.add_argument("--explain", metavar="RULE", help="print a rule's rationale and exit")
+    ap.add_argument("--update-allowlist", action="store_true", help="regenerate the baseline")
+    ap.add_argument("--root", type=Path, default=REPO_ROOT, help="tree to scan (default: repo)")
+    ap.add_argument("--allowlist", type=Path, default=REPO_ROOT / "tools" / "check_allowlist.json")
+    args = ap.parse_args(argv)
+
+    if args.explain:
+        text = RULE_EXPLAIN.get(args.explain)
+        if text is None:
+            print(f"unknown rule {args.explain!r}; have {ALL_RULES}")
+            return 2
+        print(text)
+        return 0
+
+    run_lint_layer = args.lint or args.all or not args.audit
+    run_audit_layer = args.audit or args.all
+    rc = 0
+
+    if run_lint_layer:
+        findings = run_lint(args.root, args.rules)
+        if args.update_allowlist:
+            previous = load_allowlist(args.allowlist)
+            args.allowlist.write_text(render_allowlist(findings, previous))
+            print(f"wrote {args.allowlist} ({len(findings)} baselined findings)")
+            return 0
+        allow = load_allowlist(args.allowlist)
+        new, stale = apply_allowlist(findings, allow)
+        for f in new:
+            print(f.render())
+        for rule, key in stale:
+            print(f"STALE allowlist entry {rule} {key} — violation fixed; remove the entry")
+        n_base = len(findings) - len(new)
+        if new or stale:
+            print(f"lint: {len(new)} new finding(s), {len(stale)} stale, {n_base} baselined — FAIL")
+            rc = 1
+        else:
+            print(f"lint: clean ({n_base} baselined finding(s))")
+
+    if run_audit_layer:
+        from repro.analysis.jaxpr_audit import run_audit
+
+        report = run_audit()
+        bad = [c for c in report["cells"] if c["violations"]]
+        for c in bad:
+            for v in c["violations"]:
+                print(f"AUDIT {c['rule']}×{c['backend']}×{c['kind']}: {v}")
+        status = " — FAIL" if bad else ""
+        print(f"audit: {len(report['cells'])} cells traced, {len(bad)} violating{status}")
+        if bad:
+            rc = 1
+
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
