@@ -1,4 +1,4 @@
-"""AST lint rules R1–R6: per-file checkers over parsed source, no imports.
+"""AST lint rules R1–R6 + R8: per-file checkers over parsed source, no imports.
 
 Each rule is a pure function ``(tree, relpath) → [Finding]`` plus a path
 predicate saying where it applies; :func:`run_ast_rules` walks a source
@@ -99,6 +99,17 @@ Unreachable modules are dead code that still bit-rots against the moving
 APIs and silently escapes every test tier.  The tracked baseline lists
 the known orphans (e.g. the dynamically-imported LM arch configs) with a
 justification each; the list may only shrink.""",
+    "R8": """\
+R8: rule datapath hooks are called only inside repro/plasticity/.
+`kernel_readout` / `kernel_readout_axes` / `magnitudes_from_readout` and
+the `*_from_readout` hooks are the LearningRule ↔ kernel seam; engines,
+models, launchers, benchmarks and tests dispatch through the
+`plasticity.apply` layer (`make_plan` / `UpdatePlan` / `apply_update`),
+which owns backend resolution, packed-vs-unpacked readout selection and
+the dense / conv / sharded shape variants exactly once.  A direct hook
+call re-creates the per-consumer branch sprawl the dispatch layer
+collapsed and silently skips plan-level invariants (the silent-step
+skip, event-list capping, readout layout selection).""",
 }
 
 
@@ -302,6 +313,45 @@ def _check_r6(tree: ast.AST, relpath: str) -> list[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# R8 — rule datapath hooks only inside the plasticity dispatch layer
+# ---------------------------------------------------------------------------
+
+# the LearningRule ↔ kernel seam: the readout views plus every
+# *_from_readout datapath hook (see repro/plasticity/base.py)
+_R8_HOOKS = frozenset({
+    "kernel_readout",
+    "kernel_readout_axes",
+    "magnitudes_from_readout",
+    "fused_update_from_readout",
+    "fused_delta_from_readout",
+    "conv_delta_from_readout",
+    "sparse_update_from_readout",
+    "sparse_delta_from_readout",
+    "sparse_conv_delta_from_readout",
+})
+
+
+def _applies_r8(relpath: str) -> bool:
+    return not relpath.startswith("src/repro/plasticity/")
+
+
+def _check_r8(tree: ast.AST, relpath: str) -> list[Finding]:
+    # syntactic and receiver-agnostic (like R4): any `<expr>.<hook>(...)`
+    # call site counts — defining a hook *method* on a rule class is fine,
+    # calling one outside the dispatch layer is not
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if isinstance(func, ast.Attribute) and func.attr in _R8_HOOKS:
+            msg = (f"rule hook `.{func.attr}(...)` outside repro/plasticity/ "
+                   f"— dispatch through plasticity.apply (make_plan/UpdatePlan)")
+            out.append(Finding("R8", relpath, node.lineno, msg, relpath))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
 
@@ -313,6 +363,7 @@ AST_RULES: dict[str, tuple[Callable[[str], bool], Callable[[ast.AST, str], list[
     "R4": (_applies_r4, _check_r4),
     "R5": (_applies_r5, _check_r5),
     "R6": (_applies_r6, _check_r6),
+    "R8": (_applies_r8, _check_r8),
 }
 
 
@@ -331,7 +382,7 @@ def iter_source_files(root: Path) -> list[Path]:
 
 
 def run_ast_rules(root: Path, rules: Iterable[str] | None = None) -> list[Finding]:
-    """Run the AST rules (None = all of R1–R6) over the tree at ``root``."""
+    """Run the AST rules (None = all of R1–R6 + R8) over the tree at ``root``."""
     selected = {r: AST_RULES[r] for r in (AST_RULES if rules is None else rules)}
     findings: list[Finding] = []
     for path in iter_source_files(root):

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from repro import plasticity
 from repro.core.lif import LIFParams, LIFState, lif_init, lif_step
 from repro.core.stdp import STDPParams
+from repro.kernels.dispatch import resolve_packed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,9 +89,10 @@ class EngineConfig:
         holds ``depth <= 8``; deeper histories (valid on the unpacked
         bitplane kernel) silently keep the unpacked operands rather than
         failing mid-trace — the two datapaths are bit-identical, packing
-        is purely a bandwidth optimisation.
+        is purely a bandwidth optimisation.  Resolution is owned by
+        ``repro.kernels.dispatch.resolve_packed``.
         """
-        return self.packed_history and self.depth <= 8
+        return resolve_packed(self.packed_history, depth=self.depth)
 
 
 class EngineState(NamedTuple):
@@ -133,60 +135,19 @@ def engine_step(state: EngineState, pre_spikes: jax.Array,
     neurons, post_spikes = lif_step(state.neurons, i_in, cfg.lif)
 
     # 3. Weight update read from the *stored* timing state (past spikes),
-    #    dispatched through the selected LearningRule.  For the intrinsic-
-    #    timing rules the per-neuron magnitudes are a (depth,)·(depth, N)
-    #    register read with no relayout and the synapse matrix sees only a
-    #    rank-1 gated outer product — O(N) readout + O(N²) add/mul, no
-    #    per-pair transcendental (the paper's claim, §III); the counter
-    #    rules keep their deliberately per-pair Δt datapath.  Backend-
-    #    selectable for kernel-backed rules: "reference" keeps the pure-jnp
-    #    path; "fused" routes through the Pallas kernel (one VMEM-resident
-    #    RMW per tile), "fused_interpret" the same kernel via the
-    #    interpreter (CPU checks).
+    #    dispatched through the plasticity apply layer: one UpdatePlan
+    #    owns backend resolution (reference | fused | fused_interpret |
+    #    sparse), packed-readout selection, and the fused / event-driven /
+    #    reference datapath variants — see repro.plasticity.apply.  For
+    #    the intrinsic-timing rules the per-neuron magnitudes are a
+    #    (depth,)·(depth, N) register read with no relayout and the
+    #    synapse matrix sees only a rank-1 gated outer product — O(N)
+    #    readout + O(N²) add/mul, no per-pair transcendental (the paper's
+    #    claim, §III); the counter rules keep their deliberately per-pair
+    #    Δt datapath.
     rule = cfg.learning_rule()
-    use_kernel, interpret = plasticity.resolve_rule_backend(rule, cfg.backend)
-    compensate = cfg.effective_compensate()
-    if use_kernel:
-        # rule-owned fused datapath: history rules ride the itp_stdp
-        # kernel (packed uint8 register words by default — the paper's
-        # 8-bit register file, 4·depth× less history traffic than the
-        # float32 bitplanes; bit-identical either way, see
-        # tests/test_backend.py), counter rules the itp_counter kernel
-        # (per-pair Δt formed in-register from the uint8 counter word,
-        # window fused with the accumulate — tests/test_counter_backend.py)
-        packed = cfg.use_packed_history()
-        w = rule.fused_update_from_readout(
-            state.w, pre_spikes, post_spikes,
-            rule.kernel_readout(state.pre_hist, packed=packed),
-            rule.kernel_readout(state.post_hist, packed=packed),
-            cfg.stdp, depth=cfg.depth, pairing=cfg.pairing,
-            compensate=compensate, eta=cfg.eta, w_min=cfg.w_min,
-            w_max=cfg.w_max, interpret=interpret)
-    elif cfg.backend == "sparse":
-        # event-driven datapath: static-shape event lists (capped at
-        # cfg.max_events) gate gather/scatter updates of only the touched
-        # weight slices, reading the same packed uint8 register words the
-        # fused path stores; a silent step (no pre or post event at all)
-        # skips the update outright via lax.cond — the dense update is
-        # identically zero there (the XOR pair gate needs a spike)
-        packed = cfg.use_packed_history()
-        pre_read = rule.kernel_readout(state.pre_hist, packed=packed)
-        post_read = rule.kernel_readout(state.post_hist, packed=packed)
-
-        def _sparse_update(w):
-            return rule.sparse_update_from_readout(
-                w, pre_spikes, post_spikes, pre_read, post_read,
-                cfg.stdp, depth=cfg.depth, pairing=cfg.pairing,
-                compensate=compensate, eta=cfg.eta, w_min=cfg.w_min,
-                w_max=cfg.w_max, max_events=cfg.max_events)
-
-        any_event = jnp.any(pre_spikes != 0) | jnp.any(post_spikes)
-        w = jax.lax.cond(any_event, _sparse_update, lambda w: w, state.w)
-    else:
-        dw = rule.delta(state.pre_hist, state.post_hist,
-                        pre_spikes, post_spikes, cfg.stdp, depth=cfg.depth,
-                        pairing=cfg.pairing, compensate=compensate)
-        w = jnp.clip(state.w + cfg.eta * dw, cfg.w_min, cfg.w_max)
+    w = plasticity.apply_update(cfg, state.w, pre_spikes, post_spikes,
+                                state.pre_hist, state.post_hist)
     if cfg.quantise:
         w = _quantise(w, cfg)
 

@@ -26,9 +26,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import plasticity
 from repro.core.engine import EngineConfig, EngineState, _quantise
 from repro.core.lif import LIFState, lif_step
-from repro.core.stdp import pair_gate
 from repro.distributed.sharding import shard_map_compat
-from repro.kernels.dispatch import event_cap, spike_events
 
 
 def shard_engine_state(state: EngineState, mesh: Mesh,
@@ -57,9 +55,12 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
     """
     pre_ax, post_ax = axes
     rule = cfg.learning_rule()
-    use_kernel, interpret = plasticity.resolve_rule_backend(rule, cfg.backend)
-    sparse = cfg.backend == "sparse"
-    compensate = cfg.effective_compensate()
+    # one UpdatePlan owns backend resolution, packed-readout selection and
+    # the per-tile fused / event-driven / reference update variants — the
+    # same dispatch layer the dense engine and the SNN layers ride
+    # (repro.plasticity.apply); this module keeps only what is genuinely
+    # about sharding: partition specs, the psum, and the replicated views.
+    plan = plasticity.make_plan(cfg)
     # fused and sparse datapaths default to the per-neuron word storage
     # format: the readout crossing shard_map is one uint8 word per neuron
     # ((n,), sharded along axis 0) — the packed register word for the
@@ -67,17 +68,9 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
     # (depth, n) float32; depth > 8 exceeds the word width and keeps the
     # unpacked operands, see EngineConfig.use_packed_history) and the
     # saturating last-spike counter for the counter rules (their only
-    # kernel layout).
-    packed = cfg.use_packed_history()
-    words = (use_kernel or sparse) and rule.kernel_readout_axes(packed=packed) == 1
-    # sparse: the global presynaptic event list is extracted ONCE outside
-    # shard_map (pre spikes are replicated inputs) and crosses as a
-    # replicated static-shape (cap,) index vector; each tile translates
-    # the global indices into its own row range.  Postsynaptic events are
-    # extracted locally per tile — post spikes are computed redundantly on
-    # every device of a post-column anyway, so the local extraction adds
-    # no communication.
-    n_events = event_cap(cfg.n_pre, cfg.max_events) if sparse else 0
+    # kernel layout).  Row readouts ((rows, n), e.g. generic rank-1
+    # rules or the reference backend) shard along their neuron axis.
+    words = plan.readout_ndim() == 1
 
     def local_step(w, pre_spikes, pre_read, post_read, v, pre_ev):
         # w: local (pre_tile, post_tile); spikes and per-neuron readout
@@ -88,39 +81,8 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
         i_local = pre_spikes.astype(jnp.float32) @ w       # (post_tile,)
         i_in = jax.lax.psum(i_local, pre_ax)               # the ONE collective
         neurons, post_spikes = lif_step(LIFState(v=v), i_in, cfg.lif)
-        if use_kernel:
-            # rule-owned fused Pallas datapath per local tile — both rule
-            # families' per-neuron readouts make the tile update local
-            w = rule.fused_update_from_readout(
-                w, pre_spikes, post_spikes, pre_read, post_read, cfg.stdp,
-                depth=cfg.depth, pairing=cfg.pairing, compensate=compensate,
-                eta=cfg.eta, w_min=cfg.w_min, w_max=cfg.w_max,
-                interpret=interpret)
-        elif sparse:
-            # translate the replicated global pre-event indices into this
-            # tile's row range; out-of-tile events map to the out-of-range
-            # sentinel ``tile`` so the mode="drop" scatters ignore them
-            # (negative indices would wrap, hence the explicit remap)
-            tile = w.shape[0]
-            start = jax.lax.axis_index(pre_ax) * tile
-            local = pre_ev - start
-            local = jnp.where((local >= 0) & (local < tile), local, tile)
-            w = rule.sparse_update_from_readout(
-                w, pre_spikes, post_spikes, pre_read, post_read, cfg.stdp,
-                depth=cfg.depth, pairing=cfg.pairing, compensate=compensate,
-                eta=cfg.eta, w_min=cfg.w_min, w_max=cfg.w_max,
-                max_events=cfg.max_events, pre_events=local)
-        else:
-            ltp = rule.magnitudes_from_readout(
-                pre_read, cfg.stdp.a_plus, cfg.stdp.tau_plus,
-                depth=cfg.depth, pairing=cfg.pairing, compensate=compensate)
-            ltd = rule.magnitudes_from_readout(
-                post_read, cfg.stdp.a_minus, cfg.stdp.tau_minus,
-                depth=cfg.depth, pairing=cfg.pairing, compensate=compensate)
-            ltp_en, ltd_en = pair_gate(pre_spikes[:, None],
-                                       post_spikes[None, :])
-            dw = ltp_en * ltp[:, None] - ltd_en * ltd[None, :]
-            w = jnp.clip(w + cfg.eta * dw, cfg.w_min, cfg.w_max)
+        w = plan.tile_update(w, pre_spikes, post_spikes, pre_read,
+                             post_read, pre_events=pre_ev, pre_axis=pre_ax)
         if cfg.quantise:
             w = _quantise(w, cfg)
         return w, post_spikes, neurons.v
@@ -141,16 +103,17 @@ def make_sharded_engine_step(cfg: EngineConfig, mesh: Mesh,
 
     @jax.jit
     def step(state: EngineState, pre_spikes: jax.Array):
-        if use_kernel or sparse:
-            pre_read = rule.kernel_readout(state.pre_hist, packed=packed)
-            post_read = rule.kernel_readout(state.post_hist, packed=packed)
-        else:
-            pre_read = rule.readout(state.pre_hist).astype(jnp.float32)
-            post_read = rule.readout(state.post_hist).astype(jnp.float32)
-        if sparse:
-            pre_ev, _ = spike_events(pre_spikes, cfg.max_events)
-        else:
-            pre_ev = jnp.zeros((n_events,), jnp.int32)
+        pre_read = plan.state_readout(state.pre_hist)
+        post_read = plan.state_readout(state.post_hist)
+        # sparse: the global presynaptic event list is extracted ONCE
+        # outside shard_map (pre spikes are replicated inputs) and
+        # crosses as a replicated static-shape (cap,) index vector; each
+        # tile translates the global indices into its own row range
+        # (plan.tile_update).  Postsynaptic events are extracted locally
+        # per tile — post spikes are computed redundantly on every device
+        # of a post-column anyway, so the local extraction adds no
+        # communication.  Dense backends cross a zero-length vector.
+        pre_ev = plan.pre_events_crossing(pre_spikes)
         w, post_spikes, v = sharded(state.w,
                                     pre_spikes.astype(jnp.float32),
                                     pre_read,

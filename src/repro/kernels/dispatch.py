@@ -75,6 +75,24 @@ def resolve_backend(backend: str) -> tuple[bool, bool]:
     return backend != "reference", backend == "fused_interpret"
 
 
+def resolve_packed(packed_history: bool, *, depth: int,
+                   use_kernel: bool = True) -> bool:
+    """Single owner of the packed-vs-unpacked operand selection.
+
+    The packed layout is the paper's 8-bit register file — one uint8
+    word per neuron — so it can only hold ``depth <= 8``; deeper
+    histories keep the unpacked bitplane operands (packing is purely a
+    bandwidth optimisation, bit-identical where available, so the
+    fallback is silent rather than an error).  Ops wrappers additionally
+    pass ``use_kernel`` so the reference oracle always reads the
+    unpacked registers it is defined on.  ``EngineConfig`` /
+    ``SNNConfig.use_packed_history()`` and the ``itp_stdp`` engine
+    wrapper all resolve through here — no call site re-derives the
+    routing.
+    """
+    return bool(packed_history) and use_kernel and depth <= 8
+
+
 def default_fused_backend() -> str:
     """The fused backend this host can actually run.
 

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from repro.core.history import SpikeHistory, pack_words, registers_depth_major
 from repro.core.stdp import STDPParams, po2_weights
 from repro.kernels.dispatch import BACKENDS, LANE, resolve_backend  # noqa: F401 (re-export)
-from repro.kernels.dispatch import default_interpret
+from repro.kernels.dispatch import default_interpret, resolve_packed
 from repro.kernels.dispatch import pad_axis as _pad_to
 from repro.kernels.dispatch import round_up as _round_up
 from repro.kernels.itp_stdp.kernel import (itp_stdp_update,
@@ -166,9 +166,11 @@ def engine_weight_update(w: jax.Array,
     Drop-in accelerated replacement for ``repro.core.stdp.synapse_update``
     (same semantics, validated by tests/test_kernels.py).  ``packed=True``
     (the default) feeds the kernel one uint8 word per neuron; ``False``
-    keeps the unpacked bitplane operands (the oracle datapath).
+    keeps the unpacked bitplane operands (the oracle datapath).  The
+    routing itself is owned by ``dispatch.resolve_packed`` — this wrapper
+    carries no selection logic of its own.
     """
-    if packed and use_kernel:
+    if resolve_packed(packed, depth=pre_hist.depth, use_kernel=use_kernel):
         return weight_update_packed(
             w, pre_spike, post_spike,
             pack_words(pre_hist), pack_words(post_hist), params,

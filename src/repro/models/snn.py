@@ -10,12 +10,13 @@ All layers learn with a selectable learning rule from the
 *parity* comparison is apples-to-apples.  Convolutional STDP applies the
 pair-based rule per (patch-pixel → output-neuron) synapse, accumulated over
 spatial positions at the patch level (the dense layer is the 1×1 special
-case): every rule routes every backend through its im2col-fused kernel
-package (``repro.kernels.itp_stdp_conv`` for the history rules,
-``repro.kernels.itp_counter`` for the counter rules) — pure-jnp reference,
-compiled Pallas kernel, or the interpreted kernel — and fc layers through
-the rule's dense engine kernel, so the full rule × backend matrix runs
-end-to-end at the network level.  Readout is a deterministic ridge
+case): every rule × backend cell dispatches through the plasticity apply
+layer (``repro.plasticity.apply`` — conv layers via ``UpdatePlan.
+conv_delta``, fc layers via ``UpdatePlan.fc_delta``), which routes to the
+rule's im2col-fused kernel package (``repro.kernels.itp_stdp_conv`` for
+the history rules, ``repro.kernels.itp_counter`` for the counter rules),
+its dense engine kernel, its event-driven path, or its pure-jnp oracle —
+so the full rule × backend matrix runs end-to-end at the network level.  Readout is a deterministic ridge
 regression on time-averaged spike counts — identical across rules, so
 accuracy differences isolate the learning rule.
 
@@ -40,8 +41,7 @@ from repro import plasticity
 from repro.core.lif import (IzhikevichParams, LIFParams, izhikevich_init,
                             izhikevich_step, lif_init, lif_step)
 from repro.core.stdp import STDPParams
-from repro.kernels.dispatch import (im2col_1d, im2col_2d, im2col_words_1d,
-                                    im2col_words_2d, resolve_backend)
+from repro.kernels.dispatch import im2col_1d, im2col_2d, resolve_packed
 
 
 # ---------------------------------------------------------------------------
@@ -130,8 +130,9 @@ class SNNConfig:
     def use_packed_history(self) -> bool:
         """Packed uint8 words hold depth <= 8 only; deeper histories keep
         the unpacked bitplane kernel operands (bit-identical, so packing
-        is purely a bandwidth optimisation — never a trace-time failure)."""
-        return self.packed_history and self.depth <= 8
+        is purely a bandwidth optimisation — never a trace-time failure).
+        Resolution is owned by ``repro.kernels.dispatch.resolve_packed``."""
+        return resolve_packed(self.packed_history, depth=self.depth)
 
 
 # The paper's three networks -------------------------------------------------
@@ -291,161 +292,11 @@ def init_snn(key: jax.Array, cfg: SNNConfig, batch: int) -> SNNState:
     return SNNState(weights=tuple(weights), layers=tuple(states))
 
 
-# ---------------------------------------------------------------------------
-# Per-neuron Δw magnitude readout (shared by fc and conv reference paths)
-# ---------------------------------------------------------------------------
-
-def _rule_magnitude(state: Any, shape: tuple, amplitude: float,
-                    tau: float, cfg: SNNConfig) -> jax.Array:
-    """Per-neuron Δw magnitude read from the rule's timing state.
-
-    History rules read the bitplane register (Figs. 2-3: nearest-neighbour
-    keeps only the MSB spike, all-to-all the full fixed-point word);
-    counter rules evaluate their window function on the last-spike delay.
-    Returns (B, *shape) f32.
-    """
-    mags = cfg.learning_rule().magnitudes(
-        state, amplitude, tau, depth=cfg.depth, pairing=cfg.pairing,
-        compensate=cfg.compensate)
-    return mags.reshape(shape)
-
-
 def _quantise(w: jax.Array, cfg: SNNConfig) -> jax.Array:
     if not cfg.quantise:
         return w
     levels = (1 << (cfg.w_bits - 1)) - 1
     return jnp.round(w * levels) / levels
-
-
-def _fused_fc_delta(cfg: SNNConfig, st: "LayerState", s_in: jax.Array,
-                    s_out: jax.Array) -> jax.Array:
-    """Batch-summed Δw for an fc layer via the rule's fused Pallas kernel.
-
-    The fc layer is the engine's dense synapse matrix replicated over the
-    batch: per sample the update is the same tile update the rule's kernel
-    fuses (XOR-gated rank-1 outer product for the history rules, per-pair
-    windowed Δt for the counter rules), so we vmap the Δw read over the
-    batch and accumulate.  Equivalent to the reference einsum path
-    (tests/test_backend.py, tests/test_counter_backend.py).
-    """
-    rule = cfg.learning_rule()
-    B = s_in.shape[0]
-    pre = s_in.reshape(B, -1)                       # (B, fan_in)
-    post = s_out.reshape(B, -1)                     # (B, n_out)
-    _, interpret = resolve_backend(cfg.backend)
-    pre_read = rule.kernel_readout(st.pre_hist, packed=cfg.use_packed_history())
-    post_read = rule.kernel_readout(st.post_hist, packed=cfg.use_packed_history())
-    if pre_read.ndim == 1:
-        # per-neuron word readout (packed register words / counter words):
-        # one uint8 per neuron, stored flat over (B · n)
-        pre_read = pre_read.reshape(B, -1)          # (B, fan_in)
-        post_read = post_read.reshape(B, -1)        # (B, n_out)
-    else:
-        # unpacked oracle datapath: per-sample depth-major bitplane views
-        pre_read = pre_read.reshape(
-            cfg.depth, B, -1).transpose(1, 0, 2)    # (B, depth, fan_in)
-        post_read = post_read.reshape(
-            cfg.depth, B, -1).transpose(1, 0, 2)    # (B, depth, n_out)
-
-    def one(p, q, pr, qr):
-        return rule.fused_delta_from_readout(
-            p, q, pr, qr, cfg.stdp, depth=cfg.depth, pairing=cfg.pairing,
-            compensate=cfg.compensate, interpret=interpret)
-
-    return jax.vmap(one)(pre, post, pre_read, post_read).sum(axis=0)
-
-
-def _sparse_fc_delta(cfg: SNNConfig, st: "LayerState", s_in: jax.Array,
-                     s_out: jax.Array) -> jax.Array:
-    """Batch-summed Δw for an fc layer via the rule's event-driven path.
-
-    Mirrors ``_fused_fc_delta``'s per-sample vmap, but each sample's Δw is
-    built from its static-shape spike-event lists (capped at
-    ``cfg.max_events`` per side): only the event rows/columns are
-    scattered into the Δw matrix, everything else stays exactly zero —
-    the XOR pair gate needs a current spike on one side of the pair.
-    """
-    rule = cfg.learning_rule()
-    B = s_in.shape[0]
-    pre = s_in.reshape(B, -1)                       # (B, fan_in)
-    post = s_out.reshape(B, -1)                     # (B, n_out)
-    pre_read = rule.kernel_readout(st.pre_hist, packed=cfg.use_packed_history())
-    post_read = rule.kernel_readout(st.post_hist, packed=cfg.use_packed_history())
-    if pre_read.ndim == 1:
-        # per-neuron packed register words, stored flat over (B · n)
-        pre_read = pre_read.reshape(B, -1)          # (B, fan_in)
-        post_read = post_read.reshape(B, -1)        # (B, n_out)
-    else:
-        # unpacked oracle datapath: per-sample depth-major bitplane views
-        pre_read = pre_read.reshape(
-            cfg.depth, B, -1).transpose(1, 0, 2)    # (B, depth, fan_in)
-        post_read = post_read.reshape(
-            cfg.depth, B, -1).transpose(1, 0, 2)    # (B, depth, n_out)
-
-    def one(p, q, pr, qr):
-        return rule.sparse_delta_from_readout(
-            p, q, pr, qr, cfg.stdp, depth=cfg.depth, pairing=cfg.pairing,
-            compensate=cfg.compensate, max_events=cfg.max_events)
-
-    return jax.vmap(one)(pre, post, pre_read, post_read).sum(axis=0)
-
-
-def _conv_delta(cfg: SNNConfig, spec: SNNLayerSpec, st: "LayerState",
-                patches: jax.Array, s_out: jax.Array,
-                in_shape: tuple) -> jax.Array:
-    """Batch+position-summed Δw for a conv layer via the rule's patch path.
-
-    The conv STDP update is the dense pair rule per (patch element → output
-    channel) synapse accumulated over batch and spatial positions; after
-    im2col it is two matmuls contracting the patch-row axis, which the
-    rule's conv kernel fuses with its timing readout (po2 history read for
-    the history rules, per-element windowed Δt for the counter rules).
-    Every rule × backend cell routes here: ``reference`` takes the rule's
-    pure-jnp oracle, ``fused``/``fused_interpret`` its Pallas kernel
-    (compiled / interpreted).  The timing readout is gathered into the
-    same im2col layout as the spikes — readout commutes with the gather,
-    each patch element carries its source pixel's timing state.
-    """
-    rule = cfg.learning_rule()
-    use_kernel, interpret = resolve_backend(cfg.backend)
-    B = s_out.shape[0]
-    packed = use_kernel and cfg.use_packed_history()
-    pre_read = rule.kernel_readout(st.pre_hist, packed=packed)
-    post_read = rule.kernel_readout(st.post_hist, packed=packed)
-    if pre_read.ndim == 1:
-        # per-neuron word readout (packed register words / counter words):
-        # im2col the (M, K) uint8 words once — one byte per patch element
-        im2col_w = im2col_words_2d if spec.kind == "conv2d" else im2col_words_1d
-        pre_read = im2col_w(pre_read.reshape((B,) + tuple(in_shape)),
-                            spec.kernel, spec.stride)
-        pre_read = pre_read.reshape(-1, pre_read.shape[-1])      # (M, K)
-        post_read = post_read.reshape(-1, s_out.shape[-1])       # (M, C)
-    else:
-        # unpacked bitplane oracle layout: (depth, M, ·) float32 patches
-        im2col = im2col_2d if spec.kind == "conv2d" else im2col_1d
-        pre_read = pre_read.astype(jnp.float32)
-        pre_read = pre_read.reshape((cfg.depth, B) + tuple(in_shape))
-        pre_read = jax.vmap(
-            lambda p: im2col(p, spec.kernel, spec.stride))(pre_read)
-        pre_read = pre_read.reshape(cfg.depth, -1, pre_read.shape[-1])
-        post_read = post_read.astype(jnp.float32).reshape(
-            cfg.depth, -1, s_out.shape[-1])
-    if cfg.backend == "sparse":
-        # event-driven patch path: only patch rows with a current pre- or
-        # post-side spike can contribute through the XOR pair gate, so the
-        # rule gathers the (capped) active rows and contracts just those
-        return rule.sparse_conv_delta_from_readout(
-            patches.reshape(-1, patches.shape[-1]),  # (M, K)
-            s_out.reshape(-1, s_out.shape[-1]),      # (M, C)
-            pre_read, post_read, cfg.stdp, depth=cfg.depth,
-            pairing=cfg.pairing, compensate=cfg.compensate,
-            max_events=cfg.max_events)
-    return rule.conv_delta_from_readout(
-        patches.reshape(-1, patches.shape[-1]),      # (M, K)
-        s_out.reshape(-1, s_out.shape[-1]),          # (M, C)
-        pre_read, post_read, cfg.stdp, depth=cfg.depth,
-        pairing=cfg.pairing, compensate=cfg.compensate,
-        use_kernel=use_kernel, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -519,48 +370,24 @@ def _learnable_step(spec: SNNLayerSpec, cfg: SNNConfig, w: jax.Array,
         spikes_out = spikes_out & (jnp.arange(i_flat.shape[-1]) == winner)
     s_out = spikes_out.astype(jnp.float32)
 
-    # --- STDP update (dispatched through the selected LearningRule) -------
+    # --- STDP update (dispatched through the plasticity apply layer) ------
+    # One UpdatePlan owns backend resolution, packed-readout selection and
+    # the fused / event-driven / reference delta variants for both layer
+    # kinds (repro.plasticity.apply); the layer keeps only model-level
+    # policy — batch/patch-position normalisation, the fixed [0, 1] weight
+    # window, and quantisation.
     rule = cfg.learning_rule()
-    if train and spec.kind != "fc":
-        # patch-level conv path, all rules × all backends: the rule's
-        # im2col-fused kernel package (itp_stdp_conv for the history
-        # rules, itp_counter for the counter rules) or its jnp oracle
-        dw = _conv_delta(cfg, spec, st, patches, s_out,
-                         spikes_in.shape[1:])
-        denom = float(B * patches.shape[1])
+    if train:
+        plan = plasticity.make_plan(cfg)
+        if spec.kind != "fc":
+            dw = plan.conv_delta(st.pre_hist, st.post_hist, patches, s_out,
+                                 in_shape=spikes_in.shape[1:],
+                                 kind=spec.kind, kernel=spec.kernel,
+                                 stride=spec.stride)
+        else:
+            dw = plan.fc_delta(st.pre_hist, st.post_hist, s_in, s_out)
+        denom = float(B * patches.shape[1])            # P = 1 for fc
         w = jnp.clip(w + cfg.eta * dw / denom, 0.0, 1.0)
-        w = _quantise(w, cfg)
-    elif train and cfg.backend == "sparse":
-        # event-driven engine datapath: per-sample Δw scattered from the
-        # static-shape spike-event lists, batch-accumulated, then the
-        # same clip + quantise as the reference
-        dw = _sparse_fc_delta(cfg, st, s_in, s_out)
-        denom = float(B)                               # P = 1 for fc
-        w = jnp.clip(w + cfg.eta * dw / denom, 0.0, 1.0)
-        w = _quantise(w, cfg)
-    elif train and cfg.backend != "reference":
-        # fused engine datapath: per-sample Δw from the rule's dense
-        # Pallas kernel, batch-accumulated, then the same clip + quantise
-        # as the reference
-        dw = _fused_fc_delta(cfg, st, s_in, s_out)
-        denom = float(B)                               # P = 1 for fc
-        w = jnp.clip(w + cfg.eta * dw / denom, 0.0, 1.0)
-        w = _quantise(w, cfg)
-    elif train:
-        ltp = _rule_magnitude(st.pre_hist, spikes_in.shape, cfg.stdp.a_plus,
-                              cfg.stdp.tau_plus, cfg)      # (B,*in)
-        ltd = _rule_magnitude(st.post_hist, out_shape, cfg.stdp.a_minus,
-                              cfg.stdp.tau_minus, cfg)     # (B,*out)
-        ltp_p = ltp.reshape(B, 1, -1)                      # (B, P=1, fan_in)
-        pre_p = patches
-        post_s = s_out.reshape(B, -1, w.shape[1])          # (B,P,out)
-        ltd_m = ltd.reshape(B, -1, w.shape[1])
-        # pair gate (§V-A): potentiate where post fired alone, depress where
-        # pre fired alone — per (patch element, output neuron) synapse
-        dw_ltp = jnp.einsum("bpk,bpc->kc", (1.0 - pre_p) * ltp_p, post_s)
-        dw_ltd = jnp.einsum("bpk,bpc->kc", pre_p, (1.0 - post_s) * ltd_m)
-        denom = float(B * patches.shape[1])
-        w = jnp.clip(w + cfg.eta * (dw_ltp - dw_ltd) / denom, 0.0, 1.0)
         w = _quantise(w, cfg)
 
     # --- homeostasis θ update (training only; frozen during eval) ---------

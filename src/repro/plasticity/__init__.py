@@ -1,10 +1,20 @@
 """Pluggable learning rules: the API seam for the paper's STDP-variant
-comparison (rule × backend matrix in ROADMAP.md)."""
+comparison (rule × backend matrix in ROADMAP.md).
 
+Consumers dispatch weight updates through :mod:`repro.plasticity.apply`
+(``make_plan`` / ``UpdatePlan`` / ``apply_update``) — the single layer
+that owns backend resolution, packed-readout selection, and the
+dense/conv/sharded shape variants.  New rules subclass
+:class:`Rank1Rule` (five slim methods, every backend inherited) or
+:class:`LearningRule` (hand-tuned hooks) and register by name.
+"""
+
+from repro.plasticity.apply import UpdatePlan, apply_update, make_plan
 from repro.plasticity.base import (
     BACKENDS,
     RULES,
     LearningRule,
+    Rank1Rule,
     get_rule,
     kernel_rule_names,
     register_rule,

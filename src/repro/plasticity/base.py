@@ -2,38 +2,50 @@
 
 The paper's headline results are *comparative*: ITP-STDP against the
 original counter-based exact STDP and simpler approximations on the same
-networks.  A :class:`LearningRule` owns everything rule-specific about
-the weight-update path:
+networks — one register-file datapath, a family of rules (Tables III–V).
+This module is the platform contract that makes the family real.
 
-  * ``init_state``  — the per-population timing state (bitplane spike
-                      histories for the intrinsic-timing rules, last-spike
-                      counters for the conventional Δt-based rules);
-  * ``delta``       — the dense (n_pre × n_post) weight increment read
-                      from that state under the XOR pair gate (§V-A);
-  * ``step``        — recording the current step's spikes into the state
-                      (the hardware 'shift-in' / counter reset).
+The **slim protocol** a rule actually has to write is small — it declares
+its timing state, its readout views, and its window/delta semantics:
 
-Per-neuron ``magnitudes`` (the rank-1 readout the engine, the SNN layers
-and the sharded engine all build on) and a dense ``readout`` view (for
-``shard_map``, which needs plain arrays) are part of the protocol too.
+  * ``init_state``             — the per-population timing state
+                                 (bitplane spike histories, last-spike
+                                 counters, eligibility traces, …);
+  * ``step``                   — recording the current step's spikes
+                                 (the hardware 'shift-in' / counter
+                                 reset / trace decay);
+  * ``readout``                — a dense ``(rows, n)`` view of that
+                                 state (the arrays-only form shard_map
+                                 and the oracles consume);
+  * ``magnitudes_from_readout``— the per-neuron Δw magnitude read from
+                                 such a view (the rank-1 window
+                                 semantics);
+  * ``last_spikes``            — the k=0 spike indicator (lateral
+                                 inhibition).
 
-Rules register by name; ``EngineConfig.rule`` / ``SNNConfig.rule`` select
-one alongside ``backend``.  Every rule that sets ``has_kernel=True`` owns
-its fused Pallas datapath through the ``kernel_readout`` /
-``fused_update_from_readout`` / ``fused_delta_from_readout`` /
-``conv_delta_from_readout`` hooks: the intrinsic-timing family routes to
-the ``itp_stdp`` / ``itp_stdp_conv`` kernels, the explicit-Δt counter
-family to the ``itp_counter`` kernels — so the engine, the sharded
-engine, and the SNN layers dispatch through the rule instead of
-hard-wiring one kernel package.  Rules that set ``has_sparse=True``
-additionally own the event-driven datapath (``backend="sparse"``,
-``repro.kernels.itp_sparse``) through the ``sparse_update_from_readout``
-/ ``sparse_delta_from_readout`` / ``sparse_conv_delta_from_readout``
-hooks.  A rule without a kernel is rejected on the ``fused*`` backends —
-and one without event hooks on the ``sparse`` backend — at
-config-construction time with the full option list
-(:func:`resolve_rule_backend`), so the rule × backend matrix (ROADMAP)
-is explicit rather than discovered at trace time.
+Everything *backend*-shaped on top of that — which kernel runs, packed
+vs unpacked operands, dense vs conv vs sharded shape plumbing — lives in
+exactly one place, ``repro.plasticity.apply``: consumers build an
+``UpdatePlan`` from their config and never branch on backends or call a
+hook themselves (machine-checked by lint rule R8).  The plan talks to
+rules through the hook seam defined here (``kernel_readout`` /
+``*_from_readout``), and :class:`Rank1Rule` implements that entire seam
+generically for any rule whose update is a pair-gated rank-1 outer
+product of per-neuron magnitudes: the generic adapters feed the
+magnitude vectors through the existing ``itp_stdp`` / ``itp_stdp_conv``
+/ ``itp_sparse`` datapaths as a single depth-1 plane with unit po2
+weights, so a new rule inherits the fused, sparse, conv, and sharded
+machinery from its five slim methods with zero kernel code.
+
+The built-in families predate :class:`Rank1Rule` and keep their
+hand-tuned hooks: the intrinsic-timing rules route to the ``itp_stdp``
+/ ``itp_stdp_conv`` kernels on the packed register words, the
+explicit-Δt counter family to the ``itp_counter`` kernels on its uint8
+counter word.  ``has_kernel``/``has_sparse`` declare which backends a
+rule supports; a rule without them is rejected on the ``fused*`` /
+``sparse`` backends at config-construction time with the full option
+list (:func:`resolve_rule_backend`), so the rule × backend matrix
+(ROADMAP) is explicit rather than discovered at trace time.
 """
 
 from __future__ import annotations
@@ -42,6 +54,7 @@ import abc
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.stdp import STDPParams, pair_gate
 from repro.kernels.dispatch import BACKENDS, resolve_backend
@@ -326,6 +339,299 @@ class LearningRule(abc.ABC):
         )
         ltp_en, ltd_en = pair_gate(pre_spikes[:, None], post_spikes[None, :])
         return ltp_en * ltp[:, None] - ltd_en * ltd[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Generic rank-1 backend adapters
+# ---------------------------------------------------------------------------
+
+# Unit STDP params for the magnitude-plane adapters below: with a single
+# depth-1 plane the kernels' po2 weighting is exp2(0) = 1.0 for any tau,
+# so `po2 @ plane` returns the plane itself and the amplitudes must not
+# be applied twice.
+_UNIT_PARAMS = STDPParams(a_plus=1.0, a_minus=1.0)
+
+
+class Rank1Rule(LearningRule):
+    """Slim-protocol base: every backend from five rule-owned methods.
+
+    For any rule whose dense update is the pair-gated rank-1 form
+
+        ``dw = gate_ltp * ltp[:, None] - gate_ltd * ltd[None, :]``
+
+    with per-neuron magnitudes ``ltp``/``ltd`` read from the state, the
+    whole backend hook seam is derivable — so this base implements it
+    once, generically, and a subclass only writes the slim protocol
+    (``init_state`` / ``step`` / ``readout`` /
+    ``magnitudes_from_readout`` / ``last_spikes``).
+
+    The trick that makes the adapters exact with **zero new kernel
+    code**: the existing intrinsic-timing datapaths all compute their
+    per-neuron magnitudes as ``po2_weights(depth, tau) @ bitplanes``
+    before the shared XOR-gate/outer-product/scatter machinery.  Feeding
+    them the rule's already-computed magnitude vector as a single
+    depth-1 "bitplane" with unit amplitudes (``po2_weights(1, tau) =
+    [exp2(0)] = [1.0]`` for any tau, compensated or not) makes that dot
+    product the identity: ``1.0 * m == m`` exactly in float32.  Pairing
+    is forced to ``"all"`` inside the adapters because the
+    nearest-spike cumsum mask assumes binary planes — the rule's own
+    ``magnitudes_from_readout`` already owns whatever pairing semantics
+    it supports.
+
+    Subclasses default to the full backend column (``has_kernel`` and
+    ``has_sparse`` both True); opt out by overriding the flags and the
+    config-construction validator rejects the missing cells with the
+    usual option listing.
+    """
+
+    has_kernel: bool = True
+    has_sparse: bool = True
+
+    # -- readout views --------------------------------------------------
+
+    def kernel_readout(self, state: Any, *, packed: bool) -> jax.Array:
+        """Generic rules have one layout — the dense readout rows.
+
+        ``packed`` is a storage-format optimisation of the built-in
+        families' register words; a generic rule's rows are its storage
+        format, so the flag is accepted (the plan passes it uniformly)
+        and ignored.
+        """
+        del packed
+        return self.readout(state)
+
+    def kernel_readout_axes(self, *, packed: bool) -> int:
+        del packed
+        return 2
+
+    def readout_packed(self, state: Any) -> jax.Array:
+        raise NotImplementedError(
+            f"rule {self.name!r} has no packed word layout: generic "
+            f"rank-1 rules ship their dense readout rows to every backend"
+        )
+
+    def _readout_magnitudes(
+        self,
+        arr: jax.Array,
+        amplitude: float,
+        tau: float,
+        *,
+        depth: int,
+        pairing: str,
+        compensate: bool,
+    ) -> jax.Array:
+        """``magnitudes_from_readout`` over views with trailing dims.
+
+        The conv adapters receive ``(rows, M, K)`` patch views; flatten
+        the trailing dims to the ``(rows, n)`` contract, read, reshape
+        back.
+        """
+        rows = arr.shape[0]
+        flat = arr.reshape(rows, -1)
+        m = self.magnitudes_from_readout(
+            flat, amplitude, tau, depth=depth, pairing=pairing, compensate=compensate
+        )
+        return m.reshape(arr.shape[1:])
+
+    def _magnitude_pair(
+        self, pre_read, post_read, p, *, depth, pairing, compensate
+    ) -> tuple[jax.Array, jax.Array]:
+        ltp = self._readout_magnitudes(
+            pre_read, p.a_plus, p.tau_plus, depth=depth, pairing=pairing, compensate=compensate
+        )
+        ltd = self._readout_magnitudes(
+            post_read, p.a_minus, p.tau_minus, depth=depth, pairing=pairing, compensate=compensate
+        )
+        return ltp, ltd
+
+    # -- fused (kernel) datapath ---------------------------------------
+
+    def fused_update_from_readout(
+        self,
+        w,
+        pre_spike,
+        post_spike,
+        pre_read,
+        post_read,
+        p,
+        *,
+        depth,
+        pairing="nearest",
+        compensate=True,
+        eta=1.0,
+        w_min=0.0,
+        w_max=1.0,
+        interpret=False,
+    ):
+        from repro.kernels.itp_stdp.ops import weight_update_depth_major
+
+        ltp, ltd = self._magnitude_pair(
+            pre_read, post_read, p, depth=depth, pairing=pairing, compensate=compensate
+        )
+        return weight_update_depth_major(
+            w,
+            pre_spike,
+            post_spike,
+            ltp[None, :],
+            ltd[None, :],
+            _UNIT_PARAMS,
+            pairing="all",
+            compensate=False,
+            eta=eta,
+            w_min=w_min,
+            w_max=w_max,
+            interpret=interpret,
+        )
+
+    def fused_delta_from_readout(
+        self,
+        pre_spike,
+        post_spike,
+        pre_read,
+        post_read,
+        p,
+        *,
+        depth,
+        pairing="nearest",
+        compensate=True,
+        interpret=False,
+    ):
+        from repro.kernels.itp_stdp.ops import synapse_delta
+
+        ltp, ltd = self._magnitude_pair(
+            pre_read, post_read, p, depth=depth, pairing=pairing, compensate=compensate
+        )
+        return synapse_delta(
+            pre_spike,
+            post_spike,
+            ltp[None, :],
+            ltd[None, :],
+            _UNIT_PARAMS,
+            pairing="all",
+            compensate=False,
+            interpret=interpret,
+        )
+
+    def conv_delta_from_readout(
+        self,
+        pre_patches,
+        post_spikes,
+        pre_read,
+        post_read,
+        p,
+        *,
+        depth,
+        pairing="nearest",
+        compensate=True,
+        use_kernel=True,
+        interpret=False,
+    ):
+        from repro.kernels.itp_stdp_conv.ops import conv_synapse_delta
+
+        ltp, ltd = self._magnitude_pair(
+            pre_read, post_read, p, depth=depth, pairing=pairing, compensate=compensate
+        )
+        return conv_synapse_delta(
+            pre_patches,
+            post_spikes,
+            ltp[None],
+            ltd[None],
+            _UNIT_PARAMS,
+            pairing="all",
+            compensate=False,
+            use_kernel=use_kernel,
+            interpret=interpret,
+        )
+
+    # -- event-driven (sparse) datapath --------------------------------
+
+    def sparse_update_from_readout(
+        self,
+        w,
+        pre_spike,
+        post_spike,
+        pre_read,
+        post_read,
+        p,
+        *,
+        depth,
+        pairing="nearest",
+        compensate=True,
+        eta=1.0,
+        w_min=0.0,
+        w_max=1.0,
+        max_events=None,
+        pre_events=None,
+        post_events=None,
+    ):
+        from repro.kernels.itp_sparse.ops import sparse_weight_update
+
+        ltp, ltd = self._magnitude_pair(
+            pre_read, post_read, p, depth=depth, pairing=pairing, compensate=compensate
+        )
+        return sparse_weight_update(
+            w,
+            pre_spike,
+            post_spike,
+            ltp,
+            ltd,
+            eta=eta,
+            w_min=w_min,
+            w_max=w_max,
+            max_events=max_events,
+            pre_events=pre_events,
+            post_events=post_events,
+        )
+
+    def sparse_delta_from_readout(
+        self,
+        pre_spike,
+        post_spike,
+        pre_read,
+        post_read,
+        p,
+        *,
+        depth,
+        pairing="nearest",
+        compensate=True,
+        max_events=None,
+    ):
+        from repro.kernels.itp_sparse.ops import sparse_synapse_delta
+
+        ltp, ltd = self._magnitude_pair(
+            pre_read, post_read, p, depth=depth, pairing=pairing, compensate=compensate
+        )
+        return sparse_synapse_delta(pre_spike, post_spike, ltp, ltd, max_events=max_events)
+
+    def sparse_conv_delta_from_readout(
+        self,
+        pre_patches,
+        post_spikes,
+        pre_read,
+        post_read,
+        p,
+        *,
+        depth,
+        pairing="nearest",
+        compensate=True,
+        max_events=None,
+    ):
+        from repro.kernels.itp_sparse.ops import sparse_conv_delta
+
+        ltp, ltd = self._magnitude_pair(
+            pre_read, post_read, p, depth=depth, pairing=pairing, compensate=compensate
+        )
+        po2_one = jnp.ones((1,), jnp.float32)
+        return sparse_conv_delta(
+            pre_patches,
+            post_spikes,
+            ltp[None],
+            ltd[None],
+            po2_one,
+            po2_one,
+            nearest=False,
+            max_events=max_events,
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,5 @@
+"""R8 violation: calls a rule datapath hook outside repro/plasticity/."""
+
+
+def bad_update(rule, state, packed):
+    return rule.kernel_readout(state, packed=packed)

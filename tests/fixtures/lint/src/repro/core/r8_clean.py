@@ -1,0 +1,15 @@
+"""R8 clean twin: dispatches through the plasticity apply layer.
+
+Mentioning the hook names (kernel_readout, fused_update_from_readout) in
+a docstring — or defining a method with a hook name — must not fire; only
+call sites do.
+"""
+
+
+class FakeRule:
+    def kernel_readout(self, state, *, packed):
+        return state
+
+
+def good_update(plan, w, pre, post, pre_state, post_state):
+    return plan.update(w, pre, post, pre_state, post_state)

@@ -1,7 +1,8 @@
 """Fixture entry point: everything imported here is R7-reachable."""
-from repro.core import r1_bad, r1_clean, r2_bad, r2_clean, r4_bad, r4_clean
+from repro.core import (r1_bad, r1_clean, r2_bad, r2_clean, r4_bad, r4_clean,
+                        r8_bad, r8_clean)
 from repro.kernels.fake import ops
 from repro.used_mod import used
 
 __all__ = ["r1_bad", "r1_clean", "r2_bad", "r2_clean", "r4_bad", "r4_clean",
-           "ops", "used"]
+           "r8_bad", "r8_clean", "ops", "used"]

@@ -3,8 +3,8 @@
 Pins (a) the exact finding set each rule produces on the fixture tree
 under ``tests/fixtures/lint/`` (one violation + a clean twin per rule),
 (b) the ``--explain`` texts, (c) that the committed allowlist matches
-the repo's *actual* baseline — empty for R1–R6, because the satellite
-fixes removed every real violation — and (d) the jaxpr-audit contracts
+the repo's *actual* baseline — empty for R1–R6 and R8, because the
+satellite fixes removed every real violation — and (d) the jaxpr-audit contracts
 on a slice of the matrix (the full matrix runs as the ``static_audit``
 benchmark and in the CI gate).
 """
@@ -43,6 +43,7 @@ EXPECTED_FIXTURE_FINDINGS = {
     ("R5", "tests/test_r5_bad.py"),
     ("R6", "benchmarks/r6_bad.py"),
     ("R7", "src/repro/orphan_mod.py"),
+    ("R8", "src/repro/core/r8_bad.py"),
 }
 
 
@@ -107,6 +108,7 @@ def test_explain_first_lines():
         "R5": "R5: test modules import `_hypothesis_compat`, never `hypothesis` directly.",
         "R6": "R6: benchmarks write tracked BENCH_*.json via `bench_io.update_bench_json`.",
         "R7": "R7: every module under src/repro must be statically reachable from an",
+        "R8": "R8: rule datapath hooks are called only inside repro/plasticity/.",
     }
 
 
@@ -131,13 +133,13 @@ def test_cli_clean_on_repo(capsys):
 
 def test_committed_allowlist_matches_repo_baseline():
     """The committed baseline IS the repo's current finding set: nothing
-    new, nothing stale, and R1–R6 empty (the satellite fixes landed)."""
+    new, nothing stale, and R1–R6 + R8 empty (the satellite fixes landed)."""
     findings = run_lint(REPO_ROOT)
     allow = load_allowlist(ALLOWLIST)
     new, stale = apply_allowlist(findings, allow)
     assert new == [], [f.render() for f in new]
     assert stale == []
-    for rule in ("R1", "R2", "R3", "R4", "R5", "R6"):
+    for rule in ("R1", "R2", "R3", "R4", "R5", "R6", "R8"):
         msg = f"{rule} baseline must stay empty — fix the violation instead of allowlisting"
         assert not allow.get(rule), msg
     expected = {"repro.configs.qwen3_0_6b", "repro.models.config"}

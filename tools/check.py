@@ -2,8 +2,8 @@
 
 Layers:
 
-* default / ``--lint``  — AST rules R1–R6 + R7 import-graph dead-code
-  report, gated against the committed baseline
+* default / ``--lint``  — AST rules R1–R6 + R8 and the R7 import-graph
+  dead-code report, gated against the committed baseline
   ``tools/check_allowlist.json`` (new finding → fail; stale baseline
   entry → fail; the file only ratchets down).
 * ``--audit``           — jaxpr contract audit: trace every valid
