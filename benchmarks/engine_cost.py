@@ -71,6 +71,15 @@ OP_MODEL = {
         "add": 1, "lut_bits": 0,
         "state_bits_per_neuron": D,                # the shift register
     },
+    # reward-modulated ITP (rule="mstdp"): the same register read scaled
+    # by a per-neuron eligibility word — shift decay + credit add on the
+    # word, one multiply for the /128 fixed-point modulation (reward
+    # folds into the same scale)
+    "R-STDP (mstdp, this work)": {
+        "exp": 0, "mul": 1, "approx_mul": 0, "sub": 0, "shift": 2,
+        "add": 2, "lut_bits": 0,
+        "state_bits_per_neuron": D + 8,            # registers + eligibility
+    },
 }
 
 

@@ -66,6 +66,7 @@ RULE_TO_MODEL = {
     "exact": "P-STDP (exact)",
     "linear": "P-STDP (linear [24])",
     "imstdp": "ImSTDP [23]",
+    "mstdp": "R-STDP (mstdp, this work)",
 }
 
 

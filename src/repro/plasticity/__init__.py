@@ -23,6 +23,7 @@ from repro.plasticity.base import (
     sparse_rule_names,
     validate_update_config,
 )
+from repro.plasticity.mstdp import MSTDP, MSTDPRule, MSTDPState
 from repro.plasticity.rules import (
     EXACT,
     IMSTDP,

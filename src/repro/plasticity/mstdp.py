@@ -1,0 +1,103 @@
+"""Reward-modulated ITP-STDP (``rule="mstdp"``): the slim protocol's proof.
+
+R-STDP factorised the intrinsic-timing way: instead of a per-pair
+eligibility matrix (the conventional O(N²) formulation), each neuron
+carries one extra uint8 *eligibility word* next to its bitplane spike
+history — a spike injects a fixed credit, and every step decays it by a
+power of two (one right shift, the same shift-only arithmetic discipline
+as the po2 magnitudes of §IV).  The modulated magnitude is then
+
+    ``m_mstdp = reward * (elig / 128) * m_itp``
+
+— a per-neuron scale on the standard register-read magnitude, so the
+synapse matrix still sees only the pair-gated rank-1 outer product and
+the rule rides :class:`repro.plasticity.base.Rank1Rule` onto every
+backend (reference, fused kernels, event-driven sparse, the sharded
+engine) with **zero new kernel code and zero engine/model edits** — the
+whole point of the ISSUE-9 dispatch layer.
+
+``reward`` is a static field of the frozen rule instance: like every
+other rule hyperparameter it is baked into the jitted program
+(``dataclasses.replace(MSTDP, reward=r)`` + re-registration swaps it
+between episodes).  The registered default is ``reward=1.0``, which
+leaves mstdp a pure eligibility-gated ITP-STDP.
+
+State per neuron: ``depth`` history bits + 8 eligibility bits — one
+extra uint8 word in the same register-file format, exactly the storage
+story of the paper's 8-bit discipline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import history as H
+from repro.core.stdp import magnitudes_depth_major
+from repro.plasticity.base import Rank1Rule, register_rule
+
+# Eligibility word arithmetic: a spike injects 64 (= 0.5 in the /128
+# fixed-point read), each step halves by shift.  Saturating at 127 keeps
+# decayed (<= 63) + inject (64) inside the uint8 word — never wraps.
+ELIG_INJECT = 64
+ELIG_MAX = 127
+ELIG_SCALE = 128.0  # fixed-point denominator of the eligibility read
+
+
+class MSTDPState(NamedTuple):
+    """Per-population timing state: bitplane history + eligibility word."""
+
+    hist: H.SpikeHistory  # same packed registers as rule="itp"
+    elig: jax.Array  # (n,) uint8 eligibility
+
+
+@dataclasses.dataclass(frozen=True)
+class MSTDPRule(Rank1Rule):
+    """Reward-modulated intrinsic-timing rule (slim protocol only)."""
+
+    name: str = "mstdp"
+    compensate: bool | None = None  # defer to the config flag, like itp
+    reward: float = 1.0
+
+    def init_state(self, n: int, depth: int) -> MSTDPState:
+        return MSTDPState(H.init_history(n, depth), jnp.zeros((n,), jnp.uint8))
+
+    def step(self, state: MSTDPState, spikes: jax.Array, *, depth: int) -> MSTDPState:
+        del depth  # state carries it
+        fired = jnp.asarray(spikes).astype(jnp.uint8)
+        decayed = state.elig >> 1  # po2 decay: one shift
+        elig = jnp.minimum(
+            decayed + fired * jnp.uint8(ELIG_INJECT), jnp.uint8(ELIG_MAX)
+        )
+        return MSTDPState(H.push(state.hist, spikes), elig)
+
+    def readout(self, state: MSTDPState) -> jax.Array:
+        # (depth + 1, n) uint8: history planes (k=0 newest) + eligibility
+        regs = H.registers_depth_major(state.hist)
+        return jnp.concatenate([regs, state.elig[None, :]], axis=0)
+
+    def magnitudes_from_readout(
+        self,
+        arr: jax.Array,
+        amplitude: float,
+        tau: float,
+        *,
+        depth: int,
+        pairing: str = "nearest",
+        compensate: bool = True,
+    ) -> jax.Array:
+        del depth  # arr carries it (history rows = arr rows - 1)
+        base = magnitudes_depth_major(
+            arr[:-1], amplitude, tau, pairing=pairing, compensate=compensate
+        )
+        elig = arr[-1].astype(jnp.float32) / ELIG_SCALE
+        return self.reward * elig * base
+
+    def last_spikes(self, state: MSTDPState) -> jax.Array:
+        return H.latest(state.hist).astype(jnp.float32)
+
+
+MSTDP = register_rule(MSTDPRule())

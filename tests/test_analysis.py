@@ -191,7 +191,7 @@ def test_audit_engine_cells_clean():
     from repro.analysis.jaxpr_audit import run_audit
 
     r = run_audit(kinds=("engine",))
-    assert r["n_cells"] == 17  # 2 history × 4 + 3 counter × 3
+    assert r["n_cells"] == 21  # 2 history × 4 + 3 counter × 3 + mstdp × 4
     bad = [c for c in r["cells"] if c["violations"]]
     assert not bad, bad
     # packed-register cells really carry uint8 through the graph
@@ -219,7 +219,7 @@ def test_audit_full_matrix_clean():
     from repro.analysis.jaxpr_audit import run_audit
 
     r = run_audit()
-    assert r["n_cells"] == 68  # 17 rule×backend cells × 4 kinds
+    assert r["n_cells"] == 84  # 21 rule×backend cells × 4 kinds
     assert r["n_violating"] == 0, [c for c in r["cells"] if c["violations"]]
 
 

@@ -33,7 +33,8 @@ T_STEPS = 40
 
 def test_registry_contents():
     names = plasticity.rule_names()
-    assert set(names) >= {"itp", "itp_nocomp", "exact", "linear", "imstdp"}
+    assert set(names) >= {"itp", "itp_nocomp", "exact", "linear", "imstdp",
+                          "mstdp"}
     # every registered rule is kernel-backed since the itp_counter package
     # closed the counter side of the rule × backend matrix (PR 5)
     assert set(plasticity.kernel_rule_names()) == set(names)
@@ -82,8 +83,9 @@ def test_counter_rule_rejects_all_to_all():
 
 
 def test_sparse_rule_registry():
-    """Only the event-hook (history) rules open the sparse backend column."""
-    assert set(plasticity.sparse_rule_names()) == {"itp", "itp_nocomp"}
+    """Only rules with event hooks open the sparse backend column: the
+    history family plus the Rank1Rule-derived mstdp."""
+    assert set(plasticity.sparse_rule_names()) == {"itp", "itp_nocomp", "mstdp"}
     assert plasticity.get_rule("itp").has_sparse
     assert not plasticity.get_rule("exact").has_sparse
     # sparse maps to the non-Pallas path: consumers branch explicitly
