@@ -18,6 +18,10 @@ it exercises):
     conv_cost         — im2col-fused conv update: reference vs Pallas grid
     sparse_cost       — event-driven sparse backend: speedup vs spike
                         density + sparse/dense crossover
+    serve_cost        — online-plasticity serving: step latency,
+                        throughput vs batch, bytes/session + sessions/GiB
+                        of the packed-word plasticity cache, interleaved
+                        bit-identity (gated in CI)
     roofline          — §Roofline terms from the dry-run artifacts
     static_audit      — jaxpr contract audit fingerprint: per-cell
                         primitive counts of the traced rule × backend ×
@@ -106,6 +110,23 @@ def _run_sparse_cost(args):
             "crossover_density_model": r["crossover_density_model"]}
 
 
+def _run_serve_cost(args):
+    from benchmarks import serve_cost
+    if args.quick:
+        r = serve_cost.run(args.out, n_pre=32, n_post=16, t_steps=8,
+                           max_batch=4, reps=5,
+                           batch_sizes=serve_cost.QUICK_BATCH_SIZES,
+                           quick=True)
+    else:
+        r = serve_cost.run(args.out)
+    return {"p50_ms": r["latency"]["p50_ms"],
+            "p99_ms": r["latency"]["p99_ms"],
+            "bytes_per_neuron": {m["rule"]: m["bytes_per_neuron"]
+                                 for m in r["memory"]},
+            "interleaved_bit_identical":
+                r["isolation"]["interleaved_bit_identical"]}
+
+
 def _run_roofline(args):
     from benchmarks import roofline
     r = roofline.run(args.out)
@@ -130,6 +151,7 @@ MODULES = {
     "rule_cost": _run_rule_cost,
     "conv_cost": _run_conv_cost,
     "sparse_cost": _run_sparse_cost,
+    "serve_cost": _run_serve_cost,
     "roofline": _run_roofline,
     "static_audit": _run_static_audit,
 }

@@ -1,0 +1,194 @@
+"""Benchmark: online-plasticity serving cost — latency, throughput, memory.
+
+The serving layer's value proposition is the paper's 1-byte register made
+operational: a user's continual-learning state (the "plasticity cache") is
+the rule's packed uint8 word planes, so thousands of per-user networks
+stay resident per GiB and every request is one vmapped engine scan.  This
+module prices that claim:
+
+  * ``latency``    — p50/p99 wall-clock of a full-batch ``serve_step``
+    (compile excluded; host scatter/gather included, since that is the
+    per-request cost a deployment pays).
+  * ``throughput`` — requests/s and simulation-steps/s vs ``max_batch``:
+    the lanes are independent, so throughput should scale with the batch
+    until the host dispatch floor dominates.
+  * ``memory``     — per rule: plasticity-cache bytes/session, the
+    bytes/neuron CI gates at ≤ 2 (history word + eligibility word), and
+    sessions/GiB both for the cache alone and for the full resident state.
+  * ``isolation``  — the determinism contract, re-checked in the
+    benchmark harness: a session served interleaved with strangers is
+    bit-identical (spikes + weights + words) to the same session served
+    solo.  CI gates this boolean.
+
+Writes the tracked repo-root BENCH_serve.json via ``bench_io`` (quick
+runs land in the gitignored ``.quick`` twin).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.bench_io import update_bench_json
+from repro.core.engine import EngineConfig
+from repro.serve import Request, ServeConfig, SessionStore, serve_step
+
+RULES = ("itp", "exact", "mstdp")
+BATCH_SIZES = (1, 2, 4, 8, 16)
+QUICK_BATCH_SIZES = (1, 4)
+
+
+def _load(cfg: EngineConfig, scfg: ServeConfig, n_requests: int,
+          sessions: int, seed: int = 0, rate: float = 0.3) -> list[Request]:
+    key = jax.random.PRNGKey(seed)
+    reqs = []
+    for i in range(n_requests):
+        sub = jax.random.fold_in(key, i)
+        raster = (jax.random.uniform(sub, (scfg.t_steps, cfg.n_pre)) < rate)
+        reqs.append(Request(sid=f"user{i % sessions}",
+                            raster=np.asarray(raster, np.float32)))
+    return reqs
+
+
+def _serve_batches(store: SessionStore, reqs: list[Request],
+                   scfg: ServeConfig) -> list[float]:
+    """Serve ``reqs`` in full batches of distinct sessions; per-batch seconds."""
+    times = []
+    b = scfg.max_batch
+    for i in range(0, len(reqs) - b + 1, b):
+        t0 = time.perf_counter()
+        serve_step(store, reqs[i:i + b], scfg)
+        times.append(time.perf_counter() - t0)
+    return times
+
+
+def measure_latency(cfg: EngineConfig, scfg: ServeConfig, reps: int) -> dict:
+    """p50/p99 full-batch serve_step wall-clock (first batch = warmup)."""
+    store = SessionStore(cfg)
+    reqs = _load(cfg, scfg, (reps + 1) * scfg.max_batch, scfg.max_batch)
+    times = _serve_batches(store, reqs, scfg)[1:]   # drop the compile batch
+    return {
+        "reps": len(times),
+        "p50_ms": float(np.percentile(times, 50) * 1e3),
+        "p99_ms": float(np.percentile(times, 99) * 1e3),
+        "mean_ms": float(np.mean(times) * 1e3),
+    }
+
+
+def measure_throughput(cfg: EngineConfig, t_steps: int, batch_sizes,
+                       reps: int) -> list[dict]:
+    """Requests/s and sim-steps/s as the lane count grows."""
+    rows = []
+    for b in batch_sizes:
+        scfg = ServeConfig(max_batch=b, t_steps=t_steps)
+        store = SessionStore(cfg)
+        reqs = _load(cfg, scfg, (reps + 1) * b, b)
+        times = _serve_batches(store, reqs, scfg)[1:]
+        total = sum(times)
+        rows.append({
+            "max_batch": b,
+            "requests_per_s": reps * b / total,
+            "sim_steps_per_s": reps * b * t_steps / total,
+        })
+    return rows
+
+
+def measure_memory(n_pre: int, n_post: int) -> list[dict]:
+    """The per-rule session-memory table the storage claim lives in."""
+    rows = []
+    for rule in RULES:
+        store = SessionStore(EngineConfig(n_pre=n_pre, n_post=n_post,
+                                          rule=rule))
+        per = store.state_bytes_per_session()
+        rows.append({
+            "rule": rule,
+            "bytes_per_session": per,
+            "bytes_per_neuron": per / (n_pre + n_post),
+            "sessions_per_gb": store.sessions_per_gb(),
+            "resident_bytes_per_session": store.resident_bytes_per_session(),
+            "resident_sessions_per_gb": store.sessions_per_gb(resident=True),
+        })
+    return rows
+
+
+def check_isolation(cfg: EngineConfig, scfg: ServeConfig) -> bool:
+    """Interleaved-vs-solo bit-identity (the contract CI gates)."""
+    reqs = _load(cfg, scfg, 2 * scfg.max_batch, 2 * scfg.max_batch, seed=7)
+    probe = reqs[0].sid
+
+    inter = SessionStore(cfg)
+    a = serve_step(inter, reqs[:scfg.max_batch], scfg)[0]
+    b = serve_step(inter, [Request(probe, reqs[scfg.max_batch].raster)],
+                   scfg)[0]
+
+    solo = SessionStore(cfg)
+    c = serve_step(solo, [reqs[0]], scfg)[0]
+    d = serve_step(solo, [Request(probe, reqs[scfg.max_batch].raster)],
+                   scfg)[0]
+
+    same = (np.array_equal(a.post, c.post) and np.array_equal(b.post, d.post)
+            and np.array_equal(np.asarray(inter.peek(probe).w),
+                               np.asarray(solo.peek(probe).w)))
+    for x, y in zip(inter.peek(probe).pre_words + inter.peek(probe).post_words,
+                    solo.peek(probe).pre_words + solo.peek(probe).post_words):
+        same = same and np.array_equal(np.asarray(x), np.asarray(y))
+    return bool(same)
+
+
+def run(out_dir: str = "experiments/bench", verbose: bool = True,
+        n_pre: int = 256, n_post: int = 64, t_steps: int = 32,
+        max_batch: int = 8, reps: int = 30, batch_sizes=BATCH_SIZES,
+        rule: str = "itp", quick: bool = False) -> dict:
+    cfg = EngineConfig(n_pre=n_pre, n_post=n_post, rule=rule)
+    scfg = ServeConfig(max_batch=max_batch, t_steps=t_steps)
+
+    latency = measure_latency(cfg, scfg, reps)
+    throughput = measure_throughput(cfg, t_steps, batch_sizes, reps)
+    memory = measure_memory(n_pre, n_post)
+    isolated = check_isolation(cfg, ServeConfig(max_batch=min(max_batch, 4),
+                                                t_steps=min(t_steps, 8)))
+
+    out = {
+        "benchmark": "online_plasticity_serving_cost",
+        "quick": quick,
+        "rule": rule,
+        "n_pre": n_pre,
+        "n_post": n_post,
+        "t_steps": t_steps,
+        "max_batch": max_batch,
+        "latency": latency,
+        "throughput": throughput,
+        "memory": memory,
+        "isolation": {"interleaved_bit_identical": isolated},
+        "note": "latency includes host scatter/gather; compile excluded",
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "serve_cost.json"), "w") as f:
+        json.dump(out, f)
+    bench_name = "BENCH_serve.quick.json" if quick else "BENCH_serve.json"
+    update_bench_json(bench_name, {"serving": out})
+    if verbose:
+        print(f"— serving cost (rule={rule}, {n_pre}x{n_post}, "
+              f"T={t_steps}, batch={max_batch}) —")
+        print(f"  step latency: p50 {latency['p50_ms']:.2f} ms, "
+              f"p99 {latency['p99_ms']:.2f} ms over {latency['reps']} reps")
+        print(f"  {'batch':>6s} {'req/s':>10s} {'steps/s':>12s}")
+        for r in throughput:
+            print(f"  {r['max_batch']:6d} {r['requests_per_s']:10.1f} "
+                  f"{r['sim_steps_per_s']:12.1f}")
+        for m in memory:
+            print(f"  {m['rule']:>6s}: {m['bytes_per_session']} B/session "
+                  f"({m['bytes_per_neuron']:.0f} B/neuron, "
+                  f"{m['sessions_per_gb']:.2e} sessions/GiB cache, "
+                  f"{m['resident_sessions_per_gb']:.2e} resident)")
+        print(f"  interleaved bit-identical: {isolated}")
+        print(f"  → {bench_name} (serving section)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

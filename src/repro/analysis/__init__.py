@@ -10,23 +10,30 @@ Two layers (ROADMAP "Invariants (machine-checked)"):
   float64, static shapes), recording a host-independent primitive-count
   fingerprint.
 
+Plus the documentation layer, :mod:`repro.analysis.doclint` (rules
+D1/D2): fenced ```python snippets in README.md/docs/ must execute and
+intra-repo links must resolve (``python -m tools.check --docs``).
+
 Driven by ``python -m tools.check``; the committed baseline lives in
 ``tools/check_allowlist.json`` and only ever ratchets down.
 """
 from repro.analysis.allowlist import apply_allowlist, load_allowlist, render_allowlist
 from repro.analysis.astlint import AST_RULES, RULE_EXPLAIN, Finding, run_ast_rules
+from repro.analysis.doclint import DOC_RULE_EXPLAIN, run_doclint
 from repro.analysis.importgraph import run_import_graph
 from repro.analysis.lint import ALL_RULES, run_lint
 
 __all__ = [
     "ALL_RULES",
     "AST_RULES",
+    "DOC_RULE_EXPLAIN",
     "RULE_EXPLAIN",
     "Finding",
     "apply_allowlist",
     "load_allowlist",
     "render_allowlist",
     "run_ast_rules",
+    "run_doclint",
     "run_import_graph",
     "run_lint",
 ]

@@ -101,15 +101,17 @@ the known orphans (e.g. the dynamically-imported LM arch configs) with a
 justification each; the list may only shrink.""",
     "R8": """\
 R8: rule datapath hooks are called only inside repro/plasticity/.
-`kernel_readout` / `kernel_readout_axes` / `magnitudes_from_readout` and
-the `*_from_readout` hooks are the LearningRule ↔ kernel seam; engines,
-models, launchers, benchmarks and tests dispatch through the
-`plasticity.apply` layer (`make_plan` / `UpdatePlan` / `apply_update`),
-which owns backend resolution, packed-vs-unpacked readout selection and
-the dense / conv / sharded shape variants exactly once.  A direct hook
-call re-creates the per-consumer branch sprawl the dispatch layer
-collapsed and silently skips plan-level invariants (the silent-step
-skip, event-list capping, readout layout selection).""",
+`kernel_readout` / `kernel_readout_axes` / `magnitudes_from_readout`,
+the `*_from_readout` hooks, and the session word-serialization pair
+(`serve_words` / `state_from_words`) are the LearningRule ↔ kernel/store
+seam; engines, models, launchers, the serving layer, benchmarks and
+tests dispatch through the `plasticity.apply` layer (`make_plan` /
+`UpdatePlan` / `apply_update`), which owns backend resolution,
+packed-vs-unpacked readout selection and the dense / conv / sharded /
+session shape variants exactly once.  A direct hook call re-creates the
+per-consumer branch sprawl the dispatch layer collapsed and silently
+skips plan-level invariants (the silent-step skip, event-list capping,
+readout layout selection).""",
 }
 
 
@@ -316,8 +318,9 @@ def _check_r6(tree: ast.AST, relpath: str) -> list[Finding]:
 # R8 — rule datapath hooks only inside the plasticity dispatch layer
 # ---------------------------------------------------------------------------
 
-# the LearningRule ↔ kernel seam: the readout views plus every
-# *_from_readout datapath hook (see repro/plasticity/base.py)
+# the LearningRule ↔ kernel seam: the readout views, every
+# *_from_readout datapath hook, and the session word-serialization pair
+# the serving layer's per-user state rides on (see repro/plasticity/base.py)
 _R8_HOOKS = frozenset({
     "kernel_readout",
     "kernel_readout_axes",
@@ -328,6 +331,8 @@ _R8_HOOKS = frozenset({
     "sparse_update_from_readout",
     "sparse_delta_from_readout",
     "sparse_conv_delta_from_readout",
+    "serve_words",
+    "state_from_words",
 })
 
 

@@ -1,0 +1,133 @@
+"""doc-lint: executable documentation, checked like code.
+
+Two rules over the repo's markdown layer (README.md + docs/):
+
+* **D1 — snippets execute.**  Every fenced ```` ```python ```` block is
+  run in a subprocess from the repo root with ``PYTHONPATH=src``; a
+  non-zero exit is a finding.  Docs drift silently the moment an API they
+  quote changes shape — executing them turns every rename into a CI
+  failure instead of a confused reader.  Blocks that legitimately cannot
+  run standalone (pseudo-code, shell-flavoured fragments) should be
+  fenced as ``text``/``bash``/plain instead of ``python``; the fence
+  language is the opt-in.
+* **D2 — intra-repo links resolve.**  Every inline markdown link whose
+  target is a relative path (no scheme, no ``#``-only anchor) must exist
+  relative to the linking file.  Anchors on existing files are not
+  checked (heading slugs are renderer-specific); external URLs are out
+  of scope.
+
+Run via ``python -m tools.check --docs`` (included in ``--all``).  Kept
+out of the ``run_lint`` AST layer on purpose: these rules execute
+documentation (D1 spawns interpreters), while R1–R8 are pure
+source-tree analysis that must stay import-free and fast.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis.astlint import Finding
+
+DOC_GLOBS = ("README.md", "docs/*.md")
+SNIPPET_TIMEOUT_S = 120
+
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+# inline links only; reference-style and images share the (...) target form
+_LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+
+
+def doc_files(root: Path) -> list[Path]:
+    out: list[Path] = []
+    for pattern in DOC_GLOBS:
+        out.extend(sorted(root.glob(pattern)))
+    return [p for p in out if p.is_file()]
+
+
+def python_snippets(text: str) -> list[tuple[int, str]]:
+    """(start_line, source) for every fenced ```python block."""
+    snippets = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE_RE.match(lines[i])
+        if m and m.group(1) == "python":
+            start = i + 2  # 1-based line of the snippet's first line
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            snippets.append((start, "\n".join(body)))
+        i += 1
+    return snippets
+
+
+def check_snippets(root: Path, path: Path) -> list[Finding]:
+    """D1: every ```python fence in ``path`` must run clean."""
+    findings = []
+    rel = path.relative_to(root).as_posix()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    for line, src in python_snippets(path.read_text()):
+        try:
+            proc = subprocess.run(
+                [sys.executable, "-c", src],
+                cwd=root,
+                env=env,
+                capture_output=True,
+                text=True,
+                timeout=SNIPPET_TIMEOUT_S,
+            )
+        except subprocess.TimeoutExpired:
+            findings.append(
+                Finding("D1", rel, line, f"snippet timed out after {SNIPPET_TIMEOUT_S}s")
+            )
+            continue
+        if proc.returncode != 0:
+            tail = (proc.stderr or proc.stdout).strip().splitlines()
+            detail = tail[-1] if tail else f"exit {proc.returncode}"
+            findings.append(Finding("D1", rel, line, f"snippet failed: {detail}"))
+    return findings
+
+
+def check_links(root: Path, path: Path) -> list[Finding]:
+    """D2: relative link targets must exist on disk."""
+    findings = []
+    rel = path.relative_to(root).as_posix()
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        for target in _LINK_RE.findall(line):
+            if "://" in target or target.startswith(("#", "mailto:")):
+                continue
+            dest = target.split("#", 1)[0]
+            if not dest:
+                continue
+            if not (path.parent / dest).exists():
+                findings.append(Finding("D2", rel, lineno, f"broken link target {target!r}"))
+    return findings
+
+
+def run_doclint(root: Path, *, execute: bool = True) -> list[Finding]:
+    """All doc findings; ``execute=False`` skips D1 (link-check only)."""
+    findings: list[Finding] = []
+    for path in doc_files(root):
+        findings.extend(check_links(root, path))
+        if execute:
+            findings.extend(check_snippets(root, path))
+    return sorted(findings)
+
+
+DOC_RULE_EXPLAIN = {
+    "D1": (
+        "D1: every ```python fence in README.md/docs/ must execute "
+        "clean from the repo root (PYTHONPATH=src). Fence non-runnable "
+        "fragments as text/bash instead."
+    ),
+    "D2": (
+        "D2: relative markdown link targets in README.md/docs/ must "
+        "exist on disk (anchors and external URLs are not checked)."
+    ),
+}

@@ -1,3 +1,4 @@
 from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_checkpoint,
-                                         list_checkpoints, prune_checkpoints,
-                                         restore_checkpoint, save_checkpoint)
+                                         list_checkpoints, load_manifest,
+                                         prune_checkpoints, restore_checkpoint,
+                                         save_checkpoint)

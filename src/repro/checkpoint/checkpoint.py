@@ -87,6 +87,20 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree,
     return final
 
 
+def load_manifest(ckpt_dir: str, step: int) -> dict:
+    """The committed manifest of one step — leaf metadata plus ``extra``.
+
+    Restore-side callers that need the saver's ``extra`` payload *before*
+    they can build a restore target read it from here (e.g. the serving
+    ``SessionStore``, whose checkpoint tree is keyed by the session ids
+    recorded in ``extra``); the leaf data itself still round-trips through
+    :func:`restore_checkpoint` so every checksum is verified.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:09d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)
+
+
 def list_checkpoints(ckpt_dir: str) -> list[int]:
     if not os.path.isdir(ckpt_dir):
         return []

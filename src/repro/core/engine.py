@@ -12,7 +12,10 @@ Dataflow per step (matches Fig. 9 left-to-right):
      each postsynaptic neuron accumulates  I_j = Σ_i s_i · w_ij   (§V-B)
   2. LIF neurons integrate I and fire
   3. the timing state is read → Δw per the selected ``LearningRule``
-     (``EngineConfig.rule``), weights updated in place
+     (``EngineConfig.rule``), weights updated in place — unless the
+     static ``learn=False`` flag freezes plasticity (the weight update
+     is omitted from the trace entirely; used by the serving layer's
+     eval traffic and by evaluation passes)
   4. new spikes are recorded into the state (the 'shift-in')
 
 The engine is pure function + NamedTuple state, so it jits, vmaps over
@@ -124,15 +127,26 @@ def _quantise(w: jax.Array, cfg: EngineConfig) -> jax.Array:
 
 
 def engine_step(state: EngineState, pre_spikes: jax.Array,
-                cfg: EngineConfig) -> tuple[EngineState, jax.Array]:
-    """One full engine cycle; returns (state', post_spikes)."""
+                cfg: EngineConfig, *, learn: bool = True,
+                v_th_offset: jax.Array | float = 0.0
+                ) -> tuple[EngineState, jax.Array]:
+    """One full engine cycle; returns (state', post_spikes).
+
+    ``learn`` is a Python-static switch: ``False`` freezes plasticity —
+    step 3 (the weight update) is omitted from the trace entirely, so
+    dynamics run read-only on the current weights (the serving layer's
+    eval-traffic mode).  ``v_th_offset`` forwards to ``lif_step`` as the
+    per-neuron adaptive-threshold term θ (serving homeostasis); 0 keeps
+    the plain fixed threshold.
+    """
     pre_spikes = jnp.asarray(pre_spikes)
 
     # 1. synaptic accumulation, gated by presynaptic activity (§V-B)
     i_in = pre_spikes.astype(jnp.float32) @ state.w          # (n_post,)
 
     # 2. LIF integrate-and-fire
-    neurons, post_spikes = lif_step(state.neurons, i_in, cfg.lif)
+    neurons, post_spikes = lif_step(state.neurons, i_in, cfg.lif,
+                                    v_th_offset=v_th_offset)
 
     # 3. Weight update read from the *stored* timing state (past spikes),
     #    dispatched through the plasticity apply layer: one UpdatePlan
@@ -146,10 +160,12 @@ def engine_step(state: EngineState, pre_spikes: jax.Array,
     #    claim, §III); the counter rules keep their deliberately per-pair
     #    Δt datapath.
     rule = cfg.learning_rule()
-    w = plasticity.apply_update(cfg, state.w, pre_spikes, post_spikes,
-                                state.pre_hist, state.post_hist)
-    if cfg.quantise:
-        w = _quantise(w, cfg)
+    w = state.w
+    if learn:
+        w = plasticity.apply_update(cfg, w, pre_spikes, post_spikes,
+                                    state.pre_hist, state.post_hist)
+        if cfg.quantise:
+            w = _quantise(w, cfg)
 
     # 4. record the new spikes (history shift-in / counter reset)
     pre_hist = rule.step(state.pre_hist, pre_spikes, depth=cfg.depth)
@@ -158,10 +174,11 @@ def engine_step(state: EngineState, pre_spikes: jax.Array,
 
 
 def run_engine(state: EngineState, spike_train: jax.Array,
-               cfg: EngineConfig) -> tuple[EngineState, jax.Array]:
+               cfg: EngineConfig, *, learn: bool = True
+               ) -> tuple[EngineState, jax.Array]:
     """Scan the engine over a (T, n_pre) input raster; returns post raster."""
     def step(s, x):
-        s, out = engine_step(s, x, cfg)
+        s, out = engine_step(s, x, cfg, learn=learn)
         return s, out
 
     state, post = jax.lax.scan(step, state, spike_train)
@@ -193,10 +210,12 @@ def init_engine_population(key: jax.Array, cfg: EngineConfig,
 
 
 def run_engine_population(states: EngineState, spike_trains: jax.Array,
-                          cfg: EngineConfig
+                          cfg: EngineConfig, *, learn: bool = True
                           ) -> tuple[EngineState, jax.Array]:
     """Scan every replica over its own raster; ``spike_trains``: (R, T, n_pre).
 
-    Returns (states', post rasters (R, T, n_post)).
+    Returns (states', post rasters (R, T, n_post)).  ``learn=False``
+    freezes plasticity in every replica (see :func:`engine_step`).
     """
-    return jax.vmap(lambda s, x: run_engine(s, x, cfg))(states, spike_trains)
+    return jax.vmap(lambda s, x: run_engine(s, x, cfg, learn=learn))(
+        states, spike_trains)

@@ -125,6 +125,25 @@ def unpack_words(words: jax.Array, depth: int) -> jax.Array:
     return ((words[..., None] >> shifts) & jnp.uint8(1)).astype(jnp.uint8)
 
 
+def from_words(words: jax.Array, depth: int) -> SpikeHistory:
+    """Rebuild a ring buffer from packed words: inverse of :func:`pack_words`.
+
+    The head position is not stored in the word — it doesn't need to be:
+    every readout (:func:`registers_depth_major`, :func:`as_register`,
+    :func:`latest`, :func:`pack_words`) is rotation-invariant, so any
+    (planes, head) pair with the same logical registers continues the
+    trajectory bit-identically.  The canonical choice here is
+    ``head = depth - 1`` (the :func:`init_history` layout): the k-th
+    newest register lands in plane ``depth - 1 - k`` and the next
+    :func:`push` overwrites plane 0 — the oldest slot, exactly as the
+    original buffer would have.  This is the deserialization half of the
+    serving layer's per-session "plasticity cache" (``repro.serve``).
+    """
+    regs = unpack_words(words, depth).T              # (depth, N), k=0 newest
+    return SpikeHistory(planes=regs[::-1],
+                        head=jnp.asarray(depth - 1, jnp.int32))
+
+
 def fixed_point_value(words: jax.Array, depth: int) -> jax.Array:
     """Read a packed history word as the paper's binary fraction (eq. 2).
 

@@ -20,9 +20,11 @@ from __future__ import annotations
 import argparse
 
 from repro import plasticity
+from repro.core.engine import EngineConfig
 from repro.data import synthetic_digits, synthetic_fashion, synthetic_fault
 from repro.kernels.dispatch import BACKENDS
 from repro.models import snn
+from repro.serve import ServeConfig
 from repro.train.stdp_trainer import TrainerConfig
 
 # network → (sampler over the offline stand-in dataset, n_classes); the
@@ -168,6 +170,106 @@ def add_train_flags(
         help="hard winner-take-all: only the most-driven super-threshold "
         "neuron fires per sample/position",
     )
+
+
+def add_serve_flags(ap: argparse.ArgumentParser) -> None:
+    """Online-plasticity serving knobs (``python -m repro.launch.serve``).
+
+    The network-shape flags size one session's private engine; the
+    serving flags shape the batched step and the store.  ``None``
+    defaults defer to the ``ServeConfig`` dataclass defaults.
+    """
+    ap.add_argument(
+        "--n-pre",
+        type=int,
+        default=64,
+        help="presynaptic population size of each session's network",
+    )
+    ap.add_argument(
+        "--n-post",
+        type=int,
+        default=16,
+        help="postsynaptic population size of each session's network",
+    )
+    ap.add_argument(
+        "--depth",
+        type=int,
+        default=None,
+        help="spike-history register depth (<= 8, the packed word width)",
+    )
+    ap.add_argument(
+        "--max-batch",
+        type=int,
+        default=None,
+        help="serving lanes per compiled step (batches are padded to "
+        "this, so one program serves all traffic)",
+    )
+    ap.add_argument(
+        "--t-steps",
+        type=int,
+        default=None,
+        help="simulation steps per request raster",
+    )
+    ap.add_argument(
+        "--capacity",
+        type=int,
+        default=None,
+        help="resident-session bound (LRU eviction; default unbounded)",
+    )
+    ap.add_argument(
+        "--seed",
+        type=int,
+        default=0,
+        help="PRNG seed; session weight init is keyed by (seed, sid)",
+    )
+    ap.add_argument(
+        "--theta-plus",
+        type=float,
+        default=None,
+        help="per-session adaptive-threshold increment per post spike "
+        "(0 disables homeostasis)",
+    )
+    ap.add_argument(
+        "--theta-tau",
+        type=float,
+        default=None,
+        help="adaptive-threshold decay time constant (steps)",
+    )
+
+
+def engine_config_from_args(args) -> EngineConfig:
+    """One serving session's private engine from parsed flags.
+
+    Shares rule/backend selection with :func:`add_update_flags`; only
+    flags the user actually set override the ``EngineConfig`` defaults.
+    """
+    kw = {
+        "n_pre": getattr(args, "n_pre", 64),
+        "n_post": getattr(args, "n_post", 16),
+        "rule": getattr(args, "rule", "itp"),
+        "backend": getattr(args, "backend", "reference"),
+        "max_events": getattr(args, "max_events", None),
+    }
+    if getattr(args, "depth", None) is not None:
+        kw["depth"] = args.depth
+    return EngineConfig(**kw)
+
+
+def serve_config_from_args(args) -> ServeConfig:
+    """Build the ``ServeConfig`` from parsed flags (``None`` defers to
+    the dataclass defaults)."""
+    kw = {}
+    for attr, field in (
+        ("max_batch", "max_batch"),
+        ("t_steps", "t_steps"),
+        ("theta_plus", "theta_plus"),
+        ("theta_tau", "theta_tau"),
+        ("capacity", "capacity"),
+    ):
+        v = getattr(args, attr, None)
+        if v is not None:
+            kw[field] = v
+    return ServeConfig(**kw)
 
 
 def net_from_args(args) -> str:

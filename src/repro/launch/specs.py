@@ -7,7 +7,7 @@ with the function the cell lowers:
 
   * train_*    → ``repro.train.make_train_step``    (params, opt, batch)
   * prefill_*  → last-token-logits forward           (params, batch)
-  * decode_* / long_* → ``repro.serve.make_serve_step`` (params, cache,
+  * decode_* / long_* → ``transformer.decode_step``  (params, cache,
                         tokens, pos)
 
 Modality frontends are stubs per the brief: the VLM cell feeds
@@ -27,7 +27,6 @@ from repro.configs.shapes import ShapeSpec
 from repro.distributed.sharding import (batch_axes, decode_cache_shardings,
                                         param_shardings)
 from repro.models import transformer
-from repro.serve.serving import ServeConfig, init_cache, make_serve_step
 from repro.train.optimizer import OptimizerConfig, OptState, init_opt_state
 from repro.train.train_step import TrainConfig, make_train_step
 
@@ -53,9 +52,9 @@ def abstract_opt_state(cfg):
 
 
 def abstract_cache(cfg, shape: ShapeSpec, kv_dtype="bfloat16"):
-    scfg = ServeConfig(max_tokens=shape.seq_len, batch=shape.global_batch,
-                       kv_dtype=kv_dtype)
-    return jax.eval_shape(lambda: init_cache(cfg, scfg))
+    dt = jnp.int8 if kv_dtype == "int8" else jnp.bfloat16
+    return jax.eval_shape(lambda: transformer.init_decode_cache(
+        cfg, shape.global_batch, shape.seq_len, kv_dtype=dt))
 
 
 # ---------------------------------------------------------------------------
@@ -182,13 +181,11 @@ def plan_cell(cfg, shape: ShapeSpec, mesh: Mesh, *,
         inputs = decode_inputs(cfg, shape, kv_dtype)
         cache = inputs["cache"]
         c_sh = decode_cache_shardings(cache, mesh)
-        scfg = ServeConfig(max_tokens=shape.seq_len,
-                           batch=shape.global_batch,
-                           kv_dtype=kv_dtype, unroll=train_cfg.unroll)
-        serve = make_serve_step(cfg, scfg)
 
         def fn(params, cache, tokens, pos):
-            return serve(params, cache, tokens, pos)
+            return transformer.decode_step(params, cfg, cache, pos,
+                                           tokens=tokens,
+                                           unroll=train_cfg.unroll)
 
         tok_sh = NamedSharding(
             mesh, P(batch_axes(mesh)

@@ -4,7 +4,7 @@ The int8 path stores per-(token, head) symmetric scales — amax over the
 head_dim vector — which keeps dequantisation a fused elementwise multiply
 on the attention read path.  At 512k-token contexts the KV cache dominates
 serving HBM (DESIGN.md §6); int8 halves it vs bf16 with <0.5 % logit RMSE
-(tests/test_serve.py), and is thematically the paper's own 8-bit trick
+(tests/test_models.py), and is thematically the paper's own 8-bit trick
 applied to the serving substrate.
 """
 from __future__ import annotations

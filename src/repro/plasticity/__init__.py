@@ -6,7 +6,14 @@ Consumers dispatch weight updates through :mod:`repro.plasticity.apply`
 that owns backend resolution, packed-readout selection, and the
 dense/conv/sharded shape variants.  New rules subclass
 :class:`Rank1Rule` (five slim methods, every backend inherited) or
-:class:`LearningRule` (hand-tuned hooks) and register by name.
+:class:`LearningRule` (hand-tuned hooks) and register by name — see
+docs/adding-a-rule.md for the recipe.
+
+``UpdatePlan`` also owns the session-serialization seam the serving
+layer (:mod:`repro.serve`) rides: ``words_per_neuron`` / ``init_words``
+/ ``session_words`` / ``session_state`` round-trip a rule's timing
+state through packed uint8 words (1–2 bytes/neuron) bit-exactly.  The
+underlying rule hooks are lint-guarded (R8) like the backend hooks.
 """
 
 from repro.plasticity.apply import UpdatePlan, apply_update, make_plan

@@ -92,6 +92,33 @@ class UpdatePlan:
             return self.rule.kernel_readout_axes(packed=self.packed)
         return 2
 
+    # -- session serialization (the serving "plasticity cache") ---------
+    # The serving layer (repro.serve) keeps each user's timing state as
+    # the rule's packed uint8 word planes and rehydrates them around
+    # every batched step; like the kernel hooks, the rule methods behind
+    # these (``serve_words`` / ``state_from_words``) are called only
+    # here (lint rule R8) so serving code never touches a rule layout.
+
+    def words_per_neuron(self) -> int:
+        """Resident uint8 words per neuron of the serialized timing state
+        (1 for the history/counter words, 2 for mstdp's history +
+        eligibility pair) — the bytes-per-neuron the serving store and
+        ``benchmarks/serve_cost.py`` account."""
+        return self.rule.words_per_neuron()
+
+    def init_words(self, n: int) -> tuple[jax.Array, ...]:
+        """Serialized fresh timing state for a population of ``n``."""
+        return self.session_words(self.rule.init_state(n, self.depth))
+
+    def session_words(self, state: Any) -> tuple[jax.Array, ...]:
+        """Canonical ``(n,)`` uint8 word planes of a timing state."""
+        return self.rule.serve_words(state)
+
+    def session_state(self, words: tuple[jax.Array, ...]) -> Any:
+        """Rebuild a timing state whose continued trajectory bit-matches
+        the state :meth:`session_words` serialized."""
+        return self.rule.state_from_words(words, depth=self.depth)
+
     def pre_events_crossing(self, pre_spikes: jax.Array) -> jax.Array:
         """Replicated global pre-event index vector for shard_map.
 

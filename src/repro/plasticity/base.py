@@ -108,6 +108,33 @@ class LearningRule(abc.ABC):
         """
         raise NotImplementedError(f"rule {self.name!r} has no packed (kernel) state layout")
 
+    # -- session serialization (the serving "plasticity cache") --------
+    # A rule's full timing state round-trips through a small tuple of
+    # per-neuron uint8 word planes — the resident per-user state of the
+    # serving layer (repro.serve) and the byte count the paper's 1-byte-
+    # per-synapse-state claim prices.  ``state_from_words`` must invert
+    # ``serve_words`` up to representations with identical continued
+    # trajectories (the ring-buffer head is canonicalised away: every
+    # readout is rotation-invariant, pinned by tests/test_serve.py).
+    # Like the kernel hooks these are called only through the
+    # ``UpdatePlan`` session methods (lint rule R8).
+
+    def words_per_neuron(self) -> int:
+        """Resident uint8 words per neuron of the serialized state."""
+        raise NotImplementedError(f"rule {self.name!r} has no word serialization")
+
+    def serve_words(self, state: Any) -> tuple[jax.Array, ...]:
+        """Canonical ``words_per_neuron()``-tuple of ``(n,)`` uint8 words."""
+        raise NotImplementedError(f"rule {self.name!r} has no word serialization")
+
+    def state_from_words(self, words: tuple[jax.Array, ...], *, depth: int) -> Any:
+        """Rebuild a timing state from :meth:`serve_words` output.
+
+        The rebuilt state's continued trajectory (weights, spikes, and
+        re-serialized words) must be bit-identical to the original's.
+        """
+        raise NotImplementedError(f"rule {self.name!r} has no word serialization")
+
     # -- fused (kernel) datapath ---------------------------------------
     # Rules with ``has_kernel=True`` own their fused Pallas datapath via
     # these hooks; the engine, sharded engine, and SNN layers dispatch

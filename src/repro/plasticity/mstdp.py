@@ -99,5 +99,19 @@ class MSTDPRule(Rank1Rule):
     def last_spikes(self, state: MSTDPState) -> jax.Array:
         return H.latest(state.hist).astype(jnp.float32)
 
+    # -- session serialization: history word + eligibility word ---------
+    # 2 resident bytes/neuron — the serving layer's bytes-per-session
+    # ceiling (CI gates <= 2; see benchmarks/serve_cost.py).
+
+    def words_per_neuron(self) -> int:
+        return 2
+
+    def serve_words(self, state: MSTDPState) -> tuple[jax.Array, ...]:
+        return (H.pack_words(state.hist), state.elig)
+
+    def state_from_words(self, words: tuple[jax.Array, ...], *, depth: int) -> MSTDPState:
+        hist_word, elig = words
+        return MSTDPState(H.from_words(hist_word, depth), elig.astype(jnp.uint8))
+
 
 MSTDP = register_rule(MSTDPRule())

@@ -67,6 +67,18 @@ class HistoryRule(LearningRule):
     def readout_packed(self, state: H.SpikeHistory) -> jax.Array:
         return H.pack_words(state)  # (n,) uint8, MSB = newest
 
+    # -- session serialization: one history word per neuron -------------
+
+    def words_per_neuron(self) -> int:
+        return 1
+
+    def serve_words(self, state: H.SpikeHistory) -> tuple[jax.Array, ...]:
+        return (H.pack_words(state),)
+
+    def state_from_words(self, words: tuple[jax.Array, ...], *, depth: int) -> H.SpikeHistory:
+        (word,) = words
+        return H.from_words(word, depth)
+
     def magnitudes_from_readout(
         self,
         arr: jax.Array,
@@ -329,6 +341,19 @@ class CounterRule(LearningRule):
         # same shape/sharding contract as the packed history words
         # (depth <= 255 so the saturation value always fits)
         return state.astype(jnp.uint8)
+
+    # -- session serialization: the counter word round-trips losslessly -
+
+    def words_per_neuron(self) -> int:
+        return 1
+
+    def serve_words(self, state: jax.Array) -> tuple[jax.Array, ...]:
+        return (self.readout_packed(state),)
+
+    def state_from_words(self, words: tuple[jax.Array, ...], *, depth: int) -> jax.Array:
+        del depth  # counters saturate at depth but the word stores the value
+        (word,) = words
+        return word.astype(jnp.int32)
 
     def check_pairing(self, pairing: str) -> None:
         if pairing != "nearest":

@@ -1,2 +1,11 @@
-from repro.serve.serving import (Request, ServeConfig, Server, init_cache,
-                                 make_serve_step, prefill, sample)
+"""Online-plasticity serving: per-user SNNs whose resident state is the
+paper's packed uint8 register word (see docs/architecture.md).
+
+:mod:`repro.serve.session` owns the per-session state and the LRU store;
+:mod:`repro.serve.serving` owns the batched continual-STDP step and the
+async server loop.  Entry point: ``python -m repro.launch.serve``.
+"""
+
+from repro.serve.serving import (Request, Result, ServeConfig, Server,
+                                 serve_step)
+from repro.serve.session import SessionState, SessionStore

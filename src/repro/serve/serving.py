@@ -1,164 +1,335 @@
-"""Serving: one-token decode steps, chunked prefill, and a batched
-continuous-batching server loop.
+"""Online-plasticity serving: batched continual-STDP steps over sessions.
 
-``make_serve_step`` builds the jitted decode step that the decode_32k /
-long_500k dry-run cells lower: one new token for every sequence in the
-batch against a seq_len-deep KV/SSM cache.  ``Server`` is a minimal
-continuous-batching engine over it (slot-based, greedy or temperature
-sampling) used by the serving example.
+Each request carries a spike raster for one user's private network; the
+batched :func:`serve_step` gathers up to ``ServeConfig.max_batch``
+admitted requests, rehydrates their sessions' packed word planes into
+rule timing state (:meth:`repro.plasticity.UpdatePlan.session_state`),
+runs them through the vmapped engine path with continual on-line STDP —
+one compiled program per (config, learn) pair, always padded to
+``max_batch`` lanes so the trace never respecializes — and scatters the
+updated words, weights, membrane and θ back into the
+:class:`~repro.serve.session.SessionStore`.
+
+Determinism is the design invariant: lanes are independent (no
+cross-lane reduction anywhere in the trace), so a session's trajectory
+is bit-identical whether it is served solo or interleaved with others —
+pinned by tests/test_serve.py and gated in CI via
+``benchmarks/serve_cost.py``.  ``learn=False`` requests run the same
+dynamics read-only (plasticity is omitted from the trace, nothing is
+written back): eval traffic cannot perturb a user's learned state.
+
+:class:`Server` is the async front end: ``submit``/``poll`` around a
+deterministic FIFO batch admission rule (a batch is the longest queue
+prefix with one ``learn`` flag and no repeated session — a session may
+not ride two lanes of one batch), a background serving thread, and a
+graceful ``shutdown(drain=True)`` that serves every queued request
+before stopping.  Checkpoint/restore delegates to the store
+(``repro.checkpoint``: atomic, checksummed).
 """
+
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+import functools
+import itertools
+import threading
+from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.models import transformer
-
-Params = dict[str, Any]
+from repro import plasticity
+from repro.core.engine import EngineConfig, EngineState, engine_step
+from repro.core.lif import LIFState
+from repro.serve.session import SessionState, SessionStore
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    max_tokens: int                  # KV-cache depth (context length)
-    batch: int
-    kv_dtype: str = "bfloat16"       # bfloat16 | int8
-    temperature: float = 0.0         # 0 → greedy
-    unroll: bool = False             # unroll layer scans (measurement only)
+    """Static serving knobs (hashable: baked into the compiled step).
 
-
-def make_serve_step(cfg, serve_cfg: ServeConfig) -> Callable:
-    """Returns ``step(params, cache, tokens (B,1), pos) → (logits, cache')``."""
-
-    def step(params: Params, cache: transformer.DecodeCache,
-             tokens: jax.Array, pos: jax.Array,
-             vis_embed: jax.Array | None = None):
-        kw = {"vis_embed": vis_embed} if vis_embed is not None else {}
-        return transformer.decode_step(params, cfg, cache, pos,
-                                       tokens=tokens,
-                                       unroll=serve_cfg.unroll, **kw)
-
-    return step
-
-
-def init_cache(cfg, serve_cfg: ServeConfig) -> transformer.DecodeCache:
-    dt = jnp.int8 if serve_cfg.kv_dtype == "int8" else jnp.bfloat16
-    return transformer.init_decode_cache(cfg, serve_cfg.batch,
-                                         serve_cfg.max_tokens, kv_dtype=dt)
-
-
-def prefill(params: Params, cfg, cache: transformer.DecodeCache,
-            tokens: jax.Array, serve_step: Callable,
-            vis_embed: jax.Array | None = None
-            ) -> tuple[jax.Array, transformer.DecodeCache]:
-    """Sequential prefill through the decode path (small-scale serving).
-
-    Production prefill runs the batched forward; the decode-path loop keeps
-    this example-scale implementation cache-exact for every family
-    (KV, ring-SWA, SSM state) with no second code path to validate.
+    ``t_steps`` fixes every request raster's length — one compiled
+    program serves all traffic.  ``theta_plus``/``theta_tau`` are the
+    per-session homeostasis: each post spike raises that neuron's
+    threshold θ by ``theta_plus`` and θ decays by ``exp(-1/theta_tau)``
+    per step (0 disables, matching the unsupervised-training pipeline's
+    adaptive threshold).  ``capacity`` bounds resident sessions (LRU).
     """
-    B, S = tokens.shape
 
-    def body(carry, t):
-        cache, _ = carry
-        logits, cache = serve_step(params, cache, tokens[:, t][:, None],
-                                   jnp.asarray(t),
-                                   *([vis_embed] if vis_embed is not None else []))
-        return (cache, logits), None
+    max_batch: int = 8
+    t_steps: int = 16
+    theta_plus: float = 0.0
+    theta_tau: float = 100.0
+    capacity: int | None = None
 
-    (cache, logits), _ = jax.lax.scan(
-        body, (cache, jnp.zeros((B, 1, cfg.vocab_size),
-                                jnp.dtype(cfg.dtype))),
-        jnp.arange(S))
-    return logits, cache
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.t_steps < 1:
+            raise ValueError(f"t_steps must be >= 1, got {self.t_steps}")
+        if self.theta_tau <= 0:
+            raise ValueError(f"theta_tau must be > 0, got {self.theta_tau}")
 
-
-def sample(key: jax.Array, logits: jax.Array, temperature: float) -> jax.Array:
-    """(B,1,V) → (B,) next tokens."""
-    logits = logits[:, -1].astype(jnp.float32)
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+    @property
+    def theta_decay(self) -> float:
+        return float(np.exp(-1.0 / self.theta_tau))
 
 
 @dataclasses.dataclass
 class Request:
-    uid: int
-    prompt: list            # token ids
-    max_new: int
-    out: list = dataclasses.field(default_factory=list)
-    done: bool = False
+    """One unit of traffic: a (t_steps, n_pre) spike raster for ``sid``.
+
+    ``learn=False`` marks eval traffic: the session's dynamics run on its
+    current weights but nothing — weights, words, membrane, θ — is
+    written back.
+    """
+
+    sid: str
+    raster: Any               # (t_steps, n_pre) {0,1} spikes
+    learn: bool = True
+
+
+@dataclasses.dataclass
+class Result:
+    """Completed request: the session's post-spike raster for this slice."""
+
+    sid: str
+    ticket: int
+    post: np.ndarray          # (t_steps, n_post) uint8 spikes
+    learned: bool             # False: eval traffic, state not written back
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "scfg", "learn"))
+def _batched_rollout(cfg: EngineConfig, scfg: ServeConfig, learn: bool,
+                     w, pre_words, post_words, v, theta, rasters):
+    """vmapped engine rollout over ``max_batch`` independent sessions.
+
+    All leading axes are the lane axis; lanes never interact (the
+    bit-identity contract).  Returns the updated per-lane state leaves
+    plus the post-spike rasters.
+    """
+    plan = plasticity.make_plan(cfg)
+    decay = jnp.float32(scfg.theta_decay)
+    theta_plus = jnp.float32(scfg.theta_plus)
+
+    def one(w, pw, qw, v, th, x):
+        state = EngineState(w, plan.session_state(pw),
+                            plan.session_state(qw), LIFState(v))
+
+        def step(carry, xt):
+            s, th = carry
+            s, out = engine_step(s, xt, cfg, learn=learn, v_th_offset=th)
+            th = th * decay + theta_plus * out.astype(jnp.float32)
+            return (s, th), out
+
+        (state, th), post = jax.lax.scan(step, (state, th), x)
+        return (state.w, plan.session_words(state.pre_hist),
+                plan.session_words(state.post_hist), state.neurons.v, th,
+                post.astype(jnp.uint8))
+
+    return jax.vmap(one)(w, pre_words, post_words, v, theta, rasters)
+
+
+def _stack(states: list[SessionState]):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def serve_step(store: SessionStore, requests: list[Request],
+               scfg: ServeConfig, *, tickets: list[int] | None = None
+               ) -> list[Result]:
+    """Serve one admitted batch; scatter updated state back to the store.
+
+    ``requests`` must already satisfy the admission invariants (≤
+    ``max_batch``, one ``learn`` flag, unique sids) — :class:`Server`
+    admits; direct callers get the same checks here.  Sessions absent
+    from the store are initialized on first touch.  Dead lanes are padded
+    with a template session so the compiled shape never changes.
+    """
+    if not requests:
+        return []
+    if len(requests) > scfg.max_batch:
+        raise ValueError(f"batch of {len(requests)} exceeds "
+                         f"max_batch={scfg.max_batch}")
+    learn = requests[0].learn
+    sids = [r.sid for r in requests]
+    if len(set(sids)) != len(sids):
+        raise ValueError(f"duplicate session in batch: {sids}")
+    if any(r.learn != learn for r in requests):
+        raise ValueError("mixed learn flags in one batch")
+
+    cfg = store.cfg
+    rasters = []
+    for r in requests:
+        x = jnp.asarray(r.raster, jnp.float32)
+        if x.shape != (scfg.t_steps, cfg.n_pre):
+            raise ValueError(f"request {r.sid!r}: raster shape {x.shape} != "
+                             f"({scfg.t_steps}, {cfg.n_pre})")
+        rasters.append(x)
+
+    states = [store.get_or_init(sid) for sid in sids]
+    pad = scfg.max_batch - len(requests)
+    if pad:
+        template = store.fresh_state("pad")
+        states += [template] * pad
+        rasters += [jnp.zeros((scfg.t_steps, cfg.n_pre), jnp.float32)] * pad
+
+    stacked = _stack(states)
+    w, pw, qw, v, theta, post = _batched_rollout(
+        cfg, scfg, learn, stacked.w, stacked.pre_words, stacked.post_words,
+        stacked.v, stacked.theta, jnp.stack(rasters))
+
+    post = np.asarray(post)
+    if tickets is None:
+        tickets = list(range(len(requests)))
+    results = []
+    for i, (r, ticket) in enumerate(zip(requests, tickets)):
+        if learn:
+            store.put(r.sid, SessionState(
+                w=w[i],
+                pre_words=tuple(p[i] for p in pw),
+                post_words=tuple(q[i] for q in qw),
+                v=v[i], theta=theta[i],
+                t=states[i].t + scfg.t_steps))
+        results.append(Result(sid=r.sid, ticket=ticket, post=post[i],
+                              learned=learn))
+    return results
 
 
 class Server:
-    """Slot-based continuous batching over the jitted decode step.
+    """Async submit/poll server over :func:`serve_step`.
 
-    Each of ``batch`` slots holds one request; finished slots are refilled
-    from the queue without stopping the others (their pad-token steps are
-    masked out).  This is the serving analogue of the learning engine's
-    time-multiplexed neuron pipeline (§V-B) — one compiled step serves many
-    logical streams.
+    Single-consumer: batches are admitted and served either by the
+    background thread (:meth:`start`) or by explicit :meth:`step` calls —
+    the admission rule is deterministic in queue order, so both drives
+    produce bit-identical results (pinned by the drain test).
     """
 
-    def __init__(self, params: Params, cfg, serve_cfg: ServeConfig,
-                 seed: int = 0):
-        self.params = params
-        self.cfg = cfg
-        self.scfg = serve_cfg
-        self.step_fn = jax.jit(make_serve_step(cfg, serve_cfg))
-        self.key = jax.random.PRNGKey(seed)
-        self.queue: list[Request] = []
-        self.slots: list[Request | None] = [None] * serve_cfg.batch
-        self.slot_pos = jnp.zeros((serve_cfg.batch,), jnp.int32)
-        self.cache = init_cache(cfg, serve_cfg)
-        self.completed: list[Request] = []
+    def __init__(self, cfg: EngineConfig, scfg: ServeConfig, *,
+                 seed: int = 0, store: SessionStore | None = None):
+        self.scfg = scfg
+        self.store = store if store is not None else SessionStore(
+            cfg, capacity=scfg.capacity, seed=seed)
+        self._tickets = itertools.count()
+        self._queue: list[tuple[int, Request]] = []
+        self._results: dict[int, Result] = {}
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._thread: threading.Thread | None = None
+        self._running = False
 
-    def submit(self, req: Request):
-        self.queue.append(req)
+    @property
+    def cfg(self) -> EngineConfig:
+        return self.store.cfg
 
-    def _admit(self):
-        for i, slot in enumerate(self.slots):
-            if slot is None and self.queue:
-                req = self.queue.pop(0)
-                self.slots[i] = req
-                # per-slot prefill: feed prompt tokens one at a time
-                pos = 0
-                for t in req.prompt:
-                    tok = jnp.full((self.scfg.batch, 1), 0, jnp.int32)
-                    tok = tok.at[i, 0].set(t)
-                    logits, self.cache = self.step_fn(
-                        self.params, self.cache, tok, jnp.asarray(pos))
-                    pos += 1
-                self.slot_pos = self.slot_pos.at[i].set(pos)
-                req._last_logits = logits[i]
+    # -- submit / poll --------------------------------------------------
 
-    def run(self, max_steps: int = 256) -> list[Request]:
-        """Drive all queued requests to completion (or max_steps)."""
-        for _ in range(max_steps):
-            self._admit()
-            if all(s is None for s in self.slots):
+    def submit(self, req: Request) -> int:
+        """Enqueue a request; returns the ticket :meth:`poll` redeems."""
+        with self._work:
+            ticket = next(self._tickets)
+            self._queue.append((ticket, req))
+            self._work.notify()
+        return ticket
+
+    def poll(self, ticket: int) -> Result | None:
+        """The finished :class:`Result`, or ``None`` while pending."""
+        with self._lock:
+            return self._results.pop(ticket, None)
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    # -- batch admission + serving --------------------------------------
+
+    def _admit(self) -> list[tuple[int, Request]]:
+        """Pop the next batch (caller holds the lock).
+
+        Deterministic FIFO prefix rule: the head request fixes the
+        ``learn`` flag; the prefix extends while the flag matches, the
+        session is not already aboard (two slices of one session in a
+        single batch would race on its state), and ``max_batch`` lanes
+        remain.
+        """
+        if not self._queue:
+            return []
+        learn = self._queue[0][1].learn
+        batch: list[tuple[int, Request]] = []
+        aboard: set[str] = set()
+        for item in self._queue:
+            _, req = item
+            if len(batch) == self.scfg.max_batch:
                 break
-            toks = jnp.zeros((self.scfg.batch, 1), jnp.int32)
-            for i, req in enumerate(self.slots):
-                if req is not None:
-                    logits = getattr(req, "_last_logits")
-                    self.key, sub = jax.random.split(self.key)
-                    nxt = sample(sub, logits[None], self.scfg.temperature)
-                    req.out.append(int(nxt[0]))
-                    toks = toks.at[i, 0].set(nxt[0])
-            pos = int(jnp.max(self.slot_pos))
-            logits, self.cache = self.step_fn(self.params, self.cache, toks,
-                                              jnp.asarray(pos))
-            self.slot_pos = self.slot_pos + jnp.asarray(
-                [1 if s is not None else 0 for s in self.slots], jnp.int32)
-            for i, req in enumerate(self.slots):
-                if req is None:
-                    continue
-                req._last_logits = logits[i]
-                if len(req.out) >= req.max_new:
-                    req.done = True
-                    self.completed.append(req)
-                    self.slots[i] = None
-        return self.completed
+            if req.learn != learn or req.sid in aboard:
+                break
+            batch.append(item)
+            aboard.add(req.sid)
+        del self._queue[:len(batch)]
+        return batch
+
+    def step(self) -> int:
+        """Admit and serve one batch synchronously; returns lanes served."""
+        with self._lock:
+            batch = self._admit()
+        if not batch:
+            return 0
+        tickets = [t for t, _ in batch]
+        results = serve_step(self.store, [r for _, r in batch], self.scfg,
+                             tickets=tickets)
+        with self._lock:
+            for res in results:
+                self._results[res.ticket] = res
+        return len(results)
+
+    def drain(self) -> int:
+        """Serve until the queue is empty; returns total lanes served."""
+        n = 0
+        while True:
+            served = self.step()
+            if not served:
+                return n
+            n += served
+
+    # -- async loop -----------------------------------------------------
+
+    def start(self) -> None:
+        """Start the background serving thread (idempotent)."""
+        with self._lock:
+            if self._running:
+                return
+            self._running = True
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while True:
+            with self._work:
+                while self._running and not self._queue:
+                    self._work.wait()
+                if not self._running:
+                    return
+            self.step()
+
+    def shutdown(self, *, drain: bool = True) -> int:
+        """Stop the loop; ``drain=True`` serves every queued request first.
+
+        Returns the number of lanes served during the drain.  Safe to
+        call whether or not :meth:`start` ever ran.
+        """
+        with self._work:
+            self._running = False
+            self._work.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        return self.drain() if drain else 0
+
+    # -- persistence ----------------------------------------------------
+
+    def checkpoint(self, ckpt_dir: str, step: int | None = None) -> str:
+        return self.store.checkpoint(ckpt_dir, step)
+
+    def restore(self, ckpt_dir: str, step: int | None = None) -> None:
+        self.store.restore(ckpt_dir, step)

@@ -1,0 +1,224 @@
+"""Per-user session state: the packed uint8 history word as a plasticity cache.
+
+The paper's hardware claim (Figs. 3/11) is that ITP-STDP collapses all
+per-synapse learning state into a 1-byte intrinsic-timing register per
+neuron.  At serving time that makes continual on-line learning absurdly
+cheap to keep resident per user: a session's *plasticity cache* is the
+rule's packed word planes — one history word per neuron for the
+intrinsic-timing rules, the history + eligibility pair (2 bytes) for
+``mstdp``, one counter word for the Δt baselines — serialized and
+rehydrated through :meth:`repro.plasticity.UpdatePlan.session_words` /
+``session_state`` (the rules' own layouts are behind lint rule R8).
+
+:class:`SessionStore` owns the id → :class:`SessionState` map with LRU
+eviction under an optional capacity bound, the byte accounting
+(``state_bytes_per_session`` prices the plasticity cache alone — the
+number the paper's storage claim makes small — while
+``resident_bytes_per_session`` adds the weights, membrane and θ a live
+session also carries), and checkpoint/restore through
+``repro.checkpoint`` (atomic, checksummed, session ids + LRU order in
+the manifest's ``extra``).
+"""
+
+from __future__ import annotations
+
+import zlib
+from collections import OrderedDict
+from typing import Iterator, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro import plasticity
+from repro.core.engine import EngineConfig
+
+
+class SessionState(NamedTuple):
+    """One user's resident state, word-serialized timing state included.
+
+    ``pre_words`` / ``post_words`` are the rule's canonical uint8 word
+    planes (the plasticity cache); ``w`` / ``v`` / ``theta`` are the
+    synapse matrix, membrane potential, and adaptive-threshold θ of the
+    session's private network; ``t`` counts simulation steps served.
+    """
+
+    w: jax.Array                      # float32[n_pre, n_post]
+    pre_words: tuple[jax.Array, ...]  # uint8[n_pre] × words_per_neuron
+    post_words: tuple[jax.Array, ...]  # uint8[n_post] × words_per_neuron
+    v: jax.Array                      # float32[n_post] membrane
+    theta: jax.Array                  # float32[n_post] adaptive threshold
+    t: jax.Array                      # int32 scalar, steps served
+
+
+class SessionStore:
+    """LRU-bounded id → :class:`SessionState` map with byte accounting.
+
+    ``capacity`` bounds the number of resident sessions; inserting a new
+    session at capacity evicts the least-recently-used one.  ``get`` /
+    ``put`` refresh recency; ``peek`` does not.  Session init is
+    deterministic in (``seed``, session id), so a re-initialized session
+    replays identically wherever it is created.
+    """
+
+    def __init__(self, cfg: EngineConfig, *, capacity: int | None = None,
+                 seed: int = 0):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be a positive session bound or "
+                             f"None (unbounded), got {capacity}")
+        self.cfg = cfg
+        self.plan = plasticity.make_plan(cfg)
+        self.capacity = capacity
+        self.seed = seed
+        self._sessions: OrderedDict[str, SessionState] = OrderedDict()
+
+    # -- lifecycle ------------------------------------------------------
+
+    def _key(self, sid: str) -> jax.Array:
+        # stable across processes: fold the crc of the id into the seed
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                  zlib.crc32(sid.encode()))
+
+    def fresh_state(self, sid: str = "") -> SessionState:
+        """A new session's state (weights keyed by ``(seed, sid)``)."""
+        cfg = self.cfg
+        w = jax.random.uniform(self._key(sid), (cfg.n_pre, cfg.n_post),
+                               minval=0.2, maxval=0.8).astype(jnp.float32)
+        return SessionState(
+            w=w,
+            pre_words=self.plan.init_words(cfg.n_pre),
+            post_words=self.plan.init_words(cfg.n_post),
+            v=jnp.full((cfg.n_post,), cfg.lif.e_rest, jnp.float32),
+            theta=jnp.zeros((cfg.n_post,), jnp.float32),
+            t=jnp.asarray(0, jnp.int32),
+        )
+
+    def init(self, sid: str) -> SessionState:
+        """Create (or reset) ``sid``; evicts the LRU session at capacity."""
+        if not sid or any(c in sid for c in "/\\\x00"):
+            # sids become checkpoint leaf filenames — keep them path-safe
+            raise ValueError(f"invalid session id {sid!r}")
+        if sid in self._sessions:
+            del self._sessions[sid]
+        elif self.capacity is not None and len(self._sessions) >= self.capacity:
+            self.evict()
+        state = self.fresh_state(sid)
+        self._sessions[sid] = state
+        return state
+
+    def get(self, sid: str) -> SessionState:
+        """Fetch ``sid``'s state and mark it most recently used."""
+        state = self._sessions[sid]
+        self._sessions.move_to_end(sid)
+        return state
+
+    def get_or_init(self, sid: str) -> SessionState:
+        return self.get(sid) if sid in self._sessions else self.init(sid)
+
+    def peek(self, sid: str) -> SessionState:
+        """Fetch without refreshing recency (eval/inspection reads)."""
+        return self._sessions[sid]
+
+    def put(self, sid: str, state: SessionState) -> None:
+        """Write back an updated state and mark it most recently used."""
+        self._sessions[sid] = state
+        self._sessions.move_to_end(sid)
+
+    def touch(self, sid: str) -> None:
+        self._sessions.move_to_end(sid)
+
+    def evict(self, sid: str | None = None) -> str:
+        """Drop ``sid`` (default: the least-recently-used session)."""
+        if sid is None:
+            sid, _ = self._sessions.popitem(last=False)
+            return sid
+        del self._sessions[sid]
+        return sid
+
+    def __contains__(self, sid: str) -> bool:
+        return sid in self._sessions
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._sessions)
+
+    @property
+    def session_ids(self) -> tuple[str, ...]:
+        """Resident ids, least recently used first."""
+        return tuple(self._sessions)
+
+    # -- byte accounting ------------------------------------------------
+
+    def state_bytes_per_session(self) -> int:
+        """Resident bytes of the plasticity cache alone: the packed word
+        planes of both populations (1 byte/neuron/word).  This is the
+        quantity the paper's 1-byte register claim bounds — CI gates it
+        at ≤ 2 bytes/neuron (history word + eligibility word)."""
+        n = self.cfg.n_pre + self.cfg.n_post
+        return n * self.plan.words_per_neuron()
+
+    def resident_bytes_per_session(self) -> int:
+        """Everything a session keeps resident: plasticity cache plus the
+        float32 synapse matrix, membrane, θ, and the step counter."""
+        cfg = self.cfg
+        return (self.state_bytes_per_session()
+                + 4 * cfg.n_pre * cfg.n_post      # w
+                + 4 * cfg.n_post                  # v
+                + 4 * cfg.n_post                  # theta
+                + 4)                              # t
+
+    def sessions_per_gb(self, *, resident: bool = False) -> float:
+        """How many sessions fit per GiB of host memory.
+
+        ``resident=False`` prices the plasticity cache alone (the paper's
+        headline: a 10k-neuron net is ~10 KB/session); ``resident=True``
+        includes the session's weights and neuron state.
+        """
+        per = (self.resident_bytes_per_session() if resident
+               else self.state_bytes_per_session())
+        return float(1 << 30) / per
+
+    # -- checkpoint / restore -------------------------------------------
+
+    def checkpoint(self, ckpt_dir: str, step: int | None = None) -> str:
+        """Atomic checksummed save of every resident session.
+
+        The tree is ``{sid: SessionState}``; session ids, LRU order, and
+        the config/rule fingerprint ride in the manifest's ``extra`` so
+        :meth:`restore` can rebuild its target without out-of-band state.
+        """
+        if step is None:
+            step = len(ckpt.list_checkpoints(ckpt_dir))
+        extra = {
+            "sessions": list(self._sessions),   # LRU order, oldest first
+            "rule": self.cfg.rule,
+            "n_pre": self.cfg.n_pre,
+            "n_post": self.cfg.n_post,
+            "depth": self.cfg.depth,
+        }
+        return ckpt.save_checkpoint(ckpt_dir, step, dict(self._sessions),
+                                    extra=extra)
+
+    def restore(self, ckpt_dir: str, step: int | None = None) -> None:
+        """Replace the resident map with a checkpoint's sessions.
+
+        Restores in the saved LRU order (recency survives the round
+        trip); checksums are verified leaf-by-leaf by ``repro.checkpoint``.
+        """
+        if step is None:
+            step = ckpt.latest_checkpoint(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {ckpt_dir!r}")
+        extra = ckpt.load_manifest(ckpt_dir, step)["extra"]
+        for field in ("rule", "n_pre", "n_post", "depth"):
+            have = getattr(self.cfg, field)
+            saved = extra[field]
+            if saved != have:
+                raise ValueError(f"checkpoint {field}={saved!r} does not match "
+                                 f"store config {field}={have!r}")
+        sids = extra["sessions"]
+        target = {sid: self.fresh_state(sid) for sid in sids}
+        restored = ckpt.restore_checkpoint(ckpt_dir, step, target)
+        self._sessions = OrderedDict((sid, restored[sid]) for sid in sids)

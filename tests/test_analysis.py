@@ -6,7 +6,9 @@ under ``tests/fixtures/lint/`` (one violation + a clean twin per rule),
 the repo's *actual* baseline — empty for R1–R6 and R8, because the
 satellite fixes removed every real violation — and (d) the jaxpr-audit contracts
 on a slice of the matrix (the full matrix runs as the ``static_audit``
-benchmark and in the CI gate).
+benchmark and in the CI gate).  The doc-lint layer (D1 snippet
+execution, D2 link resolution) is covered on synthetic doc trees; the
+repo's own snippets execute in the CI docs gate, not here.
 """
 import json
 import sys
@@ -16,13 +18,16 @@ import pytest
 
 from repro.analysis import (
     ALL_RULES,
+    DOC_RULE_EXPLAIN,
     RULE_EXPLAIN,
     apply_allowlist,
     load_allowlist,
     render_allowlist,
+    run_doclint,
     run_lint,
 )
 from repro.analysis.astlint import Finding
+from repro.analysis.doclint import python_snippets
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 FIXTURE_ROOT = REPO_ROOT / "tests" / "fixtures" / "lint"
@@ -180,6 +185,88 @@ def test_render_allowlist_roundtrip_keeps_justifications():
     # regenerated baseline gates clean against the same findings
     new, stale = apply_allowlist(findings, regen)
     assert new == [] and stale == []
+
+
+# ---------------------------------------------------------------------------
+# Doc-lint layer — D1 snippet execution, D2 link resolution
+# ---------------------------------------------------------------------------
+
+
+def test_python_snippets_fences_and_line_numbers():
+    text = "\n".join(
+        [
+            "intro",
+            "```python",
+            "x = 1",
+            "y = 2",
+            "```",
+            "```bash",
+            "ls",
+            "```",
+            "```python",
+            "print(x)",
+            "```",
+        ]
+    )
+    assert python_snippets(text) == [(3, "x = 1\ny = 2"), (10, "print(x)")]
+
+
+def test_doclint_clean_tree(tmp_path):
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (tmp_path / "README.md").write_text("[arch](docs/a.md)\n```python\nprint(1 + 1)\n```\n")
+    (docs / "a.md").write_text("back to the [README](../README.md)\n")
+    assert run_doclint(tmp_path) == []
+
+
+def test_doclint_d1_failing_snippet(tmp_path):
+    (tmp_path / "README.md").write_text("# t\n```python\nraise SystemExit(3)\n```\n")
+    findings = run_doclint(tmp_path)
+    assert [(f.rule, f.path, f.line) for f in findings] == [("D1", "README.md", 3)]
+    assert "snippet failed" in findings[0].message
+
+
+def test_doclint_d1_only_python_fences_execute(tmp_path):
+    (tmp_path / "README.md").write_text("```bash\nexit 1\n```\n```text\nnot code\n```\n")
+    assert run_doclint(tmp_path) == []
+
+
+def test_doclint_d2_broken_and_skipped_links(tmp_path):
+    (tmp_path / "ok.md").write_text("x")
+    (tmp_path / "README.md").write_text(
+        "[gone](missing.md) [ok](ok.md) [ext](https://example.com/x.md)\n"
+        "[anchor](#section) [anchored](ok.md#part)\n"
+    )
+    findings = run_doclint(tmp_path, execute=False)
+    assert [(f.rule, f.line) for f in findings] == [("D2", 1)]
+    assert "missing.md" in findings[0].message
+
+
+def test_doclint_execute_false_skips_snippets(tmp_path):
+    (tmp_path / "README.md").write_text("```python\nraise SystemExit(1)\n```\n")
+    assert run_doclint(tmp_path, execute=False) == []
+
+
+def test_repo_doc_links_resolve():
+    """Every intra-repo link in README.md/docs/ points at a real file
+    (snippet execution is the CI docs gate's job — too slow for here)."""
+    assert run_doclint(REPO_ROOT, execute=False) == []
+
+
+@pytest.mark.parametrize("rule", sorted(DOC_RULE_EXPLAIN))
+def test_explain_covers_doc_rules(rule, capsys):
+    rc = _tools_check().main(["--explain", rule])
+    assert rc == 0
+    assert capsys.readouterr().out.strip() == DOC_RULE_EXPLAIN[rule].strip()
+
+
+def test_cli_docs_layer_reports_findings(tmp_path, capsys):
+    (tmp_path / "README.md").write_text("[gone](missing.md)\n")
+    rc = _tools_check().main(["--docs", "--root", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "D2 README.md:1" in out
+    assert "docs: 1 finding(s) — FAIL" in out
 
 
 # ---------------------------------------------------------------------------

@@ -1,74 +1,265 @@
-"""Serving layer: prefill/decode consistency, int8 KV, the batching server."""
+"""Online-plasticity serving: session isolation, LRU store, persistence,
+eval-traffic read-only-ness, and deterministic async drain."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_smoke_config
-from repro.models import transformer
-from repro.serve import (Request, ServeConfig, Server, init_cache,
-                         make_serve_step, prefill, sample)
+from repro import plasticity
+from repro.core.engine import EngineConfig, EngineState, engine_step
+from repro.core.lif import LIFState
+from repro.serve import (Request, ServeConfig, Server, SessionState,
+                         SessionStore, serve_step)
+
+RULES = ("itp", "exact", "mstdp")
 
 
-def test_serve_step_shapes(key):
-    cfg = get_smoke_config("qwen2-1.5b")
-    params = transformer.init_model(key, cfg)
-    scfg = ServeConfig(max_tokens=32, batch=3)
-    step = jax.jit(make_serve_step(cfg, scfg))
-    cache = init_cache(cfg, scfg)
-    logits, cache2 = step(params, cache, jnp.zeros((3, 1), jnp.int32),
-                          jnp.asarray(0))
-    assert logits.shape == (3, 1, cfg.vocab_size)
-    assert cache2.kv.k.shape == cache.kv.k.shape
+def _cfg(rule="itp", **kw):
+    kw.setdefault("n_pre", 8)
+    kw.setdefault("n_post", 4)
+    return EngineConfig(rule=rule, **kw)
 
 
-@pytest.mark.slow
-def test_prefill_matches_stepwise(key):
-    cfg = get_smoke_config("qwen3-0.6b")
-    params = transformer.init_model(key, cfg)
-    scfg = ServeConfig(max_tokens=16, batch=2)
-    step = make_serve_step(cfg, scfg)
-    toks = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
-    logits_p, cache_p = prefill(params, cfg, init_cache(cfg, scfg), toks,
-                                step)
-    cache_s = init_cache(cfg, scfg)
-    for t in range(8):
-        logits_s, cache_s = step(params, cache_s, toks[:, t:t + 1],
-                                 jnp.asarray(t))
-    np.testing.assert_allclose(np.asarray(logits_p, np.float32),
-                               np.asarray(logits_s, np.float32), atol=1e-2)
-    np.testing.assert_allclose(
-        np.asarray(cache_p.kv.k, np.float32),
-        np.asarray(cache_s.kv.k, np.float32), atol=1e-2)
+def _raster(key, t, n, rate=0.4):
+    return (jax.random.uniform(key, (t, n)) < rate).astype(np.float32)
 
 
-def test_sample_greedy_vs_temperature(key):
-    logits = jnp.asarray([[[0.1, 3.0, 0.2]]])
-    assert int(sample(key, logits, 0.0)[0]) == 1
-    # temperature draws vary but stay in range
-    draws = {int(sample(jax.random.fold_in(key, i), logits, 2.0)[0])
-             for i in range(20)}
-    assert draws <= {0, 1, 2} and len(draws) > 1
+def _assert_state_equal(a: SessionState, b: SessionState):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
-def test_server_completes_requests(key):
-    cfg = get_smoke_config("qwen2-1.5b")
-    params = transformer.init_model(key, cfg)
-    scfg = ServeConfig(max_tokens=64, batch=2)
-    server = Server(params, cfg, scfg)
+# ---------------------------------------------------------------------------
+# session isolation: interleaved == solo, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", RULES)
+def test_interleaved_matches_solo_bitwise(key, rule):
+    """A session's trajectory must not depend on its batchmates: the same
+    request sequence, served solo vs interleaved with other sessions,
+    yields bit-identical spikes, weights, and word planes."""
+    cfg = _cfg(rule)
+    scfg = ServeConfig(max_batch=4, t_steps=6, theta_plus=0.05)
+    ras = [_raster(jax.random.fold_in(key, i), 6, cfg.n_pre)
+           for i in range(6)]
+
+    inter = Server(cfg, scfg)
+    t0 = inter.submit(Request("alice", ras[0]))
+    inter.submit(Request("bob", ras[1]))
+    inter.submit(Request("carol", ras[2]))
+    inter.step()
+    t1 = inter.submit(Request("alice", ras[3]))
+    inter.submit(Request("bob", ras[4]))
+    inter.step()
+
+    solo = Server(cfg, scfg)
+    s0 = solo.submit(Request("alice", ras[0]))
+    solo.step()
+    s1 = solo.submit(Request("alice", ras[3]))
+    solo.step()
+
+    np.testing.assert_array_equal(inter.poll(t0).post, solo.poll(s0).post)
+    np.testing.assert_array_equal(inter.poll(t1).post, solo.poll(s1).post)
+    _assert_state_equal(inter.store.peek("alice"), solo.store.peek("alice"))
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_sliced_serving_matches_unbroken_rollout(key, rule):
+    """Two served slices == one uninterrupted engine rollout: the
+    word-serialize → rehydrate round trip across serve_step boundaries
+    loses nothing."""
+    cfg = _cfg(rule)
+    t = 5
+    scfg = ServeConfig(max_batch=2, t_steps=t)
+    x = _raster(key, 2 * t, cfg.n_pre)
+
+    store = SessionStore(cfg)
+    serve_step(store, [Request("u", x[:t])], scfg)
+    serve_step(store, [Request("u", x[t:])], scfg)
+    served = store.peek("u")
+
+    plan = plasticity.make_plan(cfg)
+    fresh = store.fresh_state("u")
+    state = EngineState(fresh.w, plan.session_state(fresh.pre_words),
+                        plan.session_state(fresh.post_words),
+                        LIFState(fresh.v))
+    for i in range(2 * t):
+        state, _ = engine_step(state, jnp.asarray(x[i]), cfg)
+
+    np.testing.assert_array_equal(np.asarray(served.w), np.asarray(state.w))
+    for got, want in zip(served.pre_words,
+                         plan.session_words(state.pre_hist)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    for got, want in zip(served.post_words,
+                         plan.session_words(state.post_hist)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(served.t) == 2 * t
+
+
+# ---------------------------------------------------------------------------
+# the store: LRU, capacity, byte accounting
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_and_capacity():
+    store = SessionStore(_cfg(), capacity=2)
+    store.init("a")
+    store.init("b")
+    store.get("a")                       # refresh: b is now LRU
+    store.init("c")                      # evicts b
+    assert store.session_ids == ("a", "c")
+    assert "b" not in store and len(store) == 2
+    store.touch("a")
+    assert store.evict() == "c"
+
+
+def test_invalid_session_ids_rejected():
+    store = SessionStore(_cfg())
+    for bad in ("", "a/b", "a\\b", "a\x00b"):
+        with pytest.raises(ValueError):
+            store.init(bad)
+
+
+def test_session_init_deterministic_in_seed_and_sid():
+    a = SessionStore(_cfg(), seed=3).fresh_state("alice")
+    b = SessionStore(_cfg(), seed=3).fresh_state("alice")
+    _assert_state_equal(a, b)
+    c = SessionStore(_cfg(), seed=3).fresh_state("bob")
+    assert not np.array_equal(np.asarray(a.w), np.asarray(c.w))
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_plasticity_cache_at_most_two_bytes_per_neuron(rule):
+    """The paper's storage claim at the serving layer: resident learning
+    state is <= 2 bytes/neuron (history word, + eligibility for mstdp)."""
+    store = SessionStore(_cfg(rule))
+    n = store.cfg.n_pre + store.cfg.n_post
+    assert store.state_bytes_per_session() <= 2 * n
+    assert store.resident_bytes_per_session() > store.state_bytes_per_session()
+    assert store.sessions_per_gb() == (1 << 30) / store.state_bytes_per_session()
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_restore_roundtrip(key, tmp_path):
+    cfg = _cfg("mstdp")
+    scfg = ServeConfig(max_batch=2, t_steps=4)
+    sv = Server(cfg, scfg)
     for i in range(4):
-        server.submit(Request(uid=i, prompt=[1, 2, 3], max_new=5))
-    done = server.run(max_steps=200)
-    assert len(done) == 4
-    assert all(len(r.out) == 5 for r in done)
-    assert all(0 <= t < cfg.vocab_size for r in done for t in r.out)
+        sv.submit(Request(f"u{i % 3}", _raster(jax.random.fold_in(key, i),
+                                               4, cfg.n_pre)))
+    sv.drain()
+    sv.checkpoint(str(tmp_path))
+
+    sv2 = Server(cfg, scfg)
+    sv2.restore(str(tmp_path))
+    assert sv2.store.session_ids == sv.store.session_ids   # LRU order too
+    for sid in sv.store:
+        _assert_state_equal(sv.store.peek(sid), sv2.store.peek(sid))
+
+    # restored sessions continue bit-identically
+    x = _raster(jax.random.fold_in(key, 99), 4, cfg.n_pre)
+    ta, tb = sv.submit(Request("u0", x)), sv2.submit(Request("u0", x))
+    sv.step(), sv2.step()
+    np.testing.assert_array_equal(sv.poll(ta).post, sv2.poll(tb).post)
 
 
-def test_server_int8_kv(key):
-    cfg = get_smoke_config("yi-9b")
-    params = transformer.init_model(key, cfg)
-    scfg = ServeConfig(max_tokens=32, batch=2, kv_dtype="int8")
-    server = Server(params, cfg, scfg)
-    server.submit(Request(uid=0, prompt=[5, 6], max_new=4))
-    done = server.run(max_steps=64)
-    assert len(done) == 1 and len(done[0].out) == 4
+def test_restore_rejects_mismatched_config(key, tmp_path):
+    sv = Server(_cfg("itp"), ServeConfig(max_batch=1, t_steps=2))
+    sv.submit(Request("u", _raster(key, 2, 8)))
+    sv.drain()
+    sv.checkpoint(str(tmp_path))
+    other = Server(_cfg("exact"), ServeConfig(max_batch=1, t_steps=2))
+    with pytest.raises(ValueError, match="rule"):
+        other.restore(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# eval traffic is read-only
+# ---------------------------------------------------------------------------
+
+def test_learn_false_freezes_session(key):
+    cfg = _cfg("mstdp")
+    scfg = ServeConfig(max_batch=2, t_steps=4, theta_plus=0.1)
+    store = SessionStore(cfg)
+    serve_step(store, [Request("u", _raster(key, 4, cfg.n_pre))], scfg)
+    before = store.peek("u")
+
+    x = _raster(jax.random.fold_in(key, 1), 4, cfg.n_pre)
+    (res,) = serve_step(store, [Request("u", x, learn=False)], scfg)
+    assert not res.learned
+    _assert_state_equal(before, store.peek("u"))
+
+    # ... and the eval pass observed the learned state: the same raster
+    # served with learn=True spikes identically on its first slice
+    (res2,) = serve_step(store, [Request("u", x, learn=True)], scfg)
+    assert res2.learned
+    np.testing.assert_array_equal(res.post, res2.post)
+    assert int(store.peek("u").t) == 8
+
+
+# ---------------------------------------------------------------------------
+# batching + async server semantics
+# ---------------------------------------------------------------------------
+
+def test_serve_step_validates_batches(key):
+    cfg = _cfg()
+    scfg = ServeConfig(max_batch=2, t_steps=4)
+    store = SessionStore(cfg)
+    x = _raster(key, 4, cfg.n_pre)
+    with pytest.raises(ValueError, match="max_batch"):
+        serve_step(store, [Request(f"u{i}", x) for i in range(3)], scfg)
+    with pytest.raises(ValueError, match="duplicate"):
+        serve_step(store, [Request("u", x), Request("u", x)], scfg)
+    with pytest.raises(ValueError, match="learn"):
+        serve_step(store, [Request("a", x), Request("b", x, learn=False)],
+                   scfg)
+    with pytest.raises(ValueError, match="shape"):
+        serve_step(store, [Request("a", x[:2])], scfg)
+    assert serve_step(store, [], scfg) == []
+
+
+def test_admission_is_deterministic_fifo(key):
+    """Batches split at learn-flag changes and repeated sids, in queue
+    order — the rule the solo-vs-interleaved bit-identity relies on."""
+    cfg = _cfg()
+    scfg = ServeConfig(max_batch=8, t_steps=2)
+    sv = Server(cfg, scfg)
+    x = _raster(key, 2, cfg.n_pre)
+    sv.submit(Request("a", x))
+    sv.submit(Request("b", x))
+    sv.submit(Request("a", x))           # repeat sid → next batch
+    sv.submit(Request("c", x, learn=False))
+    assert sv.step() == 2                # [a, b]
+    assert sv.step() == 1                # [a] again
+    assert sv.step() == 1                # [c] (learn flag flip)
+    assert sv.step() == 0 and sv.pending == 0
+
+
+def test_async_drain_matches_synchronous_steps(key):
+    """Background-thread serving + shutdown(drain=True) is bit-identical
+    to driving step() by hand: every request answered, same results."""
+    cfg = _cfg("mstdp")
+    scfg = ServeConfig(max_batch=3, t_steps=4)
+    reqs = [Request(f"s{i % 4}", _raster(jax.random.fold_in(key, i),
+                                         4, cfg.n_pre), learn=(i % 5 != 4))
+            for i in range(12)]
+
+    sva = Server(cfg, scfg)
+    ta = [sva.submit(Request(r.sid, r.raster, r.learn)) for r in reqs]
+    sva.start()
+    sva.shutdown(drain=True)
+
+    svb = Server(cfg, scfg)
+    tb = [svb.submit(Request(r.sid, r.raster, r.learn)) for r in reqs]
+    svb.drain()
+
+    assert sva.pending == 0 and svb.pending == 0
+    for x, y in zip(ta, tb):
+        ra, rb = sva.poll(x), svb.poll(y)
+        assert ra is not None and rb is not None
+        np.testing.assert_array_equal(ra.post, rb.post)
+    for sid in svb.store:
+        _assert_state_equal(sva.store.peek(sid), svb.store.peek(sid))

@@ -11,7 +11,11 @@ Layers:
   dataflow contracts (uint8 operands, no float64).  Slower (imports
   jax and traces ~50 cells); CI runs it via the ``static_audit``
   benchmark too, which records the primitive-count fingerprint.
-* ``--all``             — both layers (the CI gate).
+* ``--docs``            — doc-lint rules D1/D2: every fenced
+  ```` ```python ```` snippet in README.md/docs/ executes clean from
+  the repo root, and every relative markdown link resolves.  No
+  allowlist — broken docs are fixed, not baselined.
+* ``--all``             — all three layers (the CI gate).
 
 ``--explain R3`` prints a rule's rationale; ``--update-allowlist``
 regenerates the baseline from the current findings, keeping existing
@@ -29,12 +33,15 @@ if str(REPO_ROOT / "src") not in sys.path:  # plain `python -m tools.check`
 
 from repro.analysis import (  # noqa: E402
     ALL_RULES,
+    DOC_RULE_EXPLAIN,
     RULE_EXPLAIN,
     apply_allowlist,
     load_allowlist,
     render_allowlist,
+    run_doclint,
     run_lint,
 )
+from repro.analysis.doclint import doc_files  # noqa: E402
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -42,9 +49,10 @@ def main(argv: list[str] | None = None) -> int:
         prog="tools.check",
         description="static-analysis gate for the repo's hardware contracts",
     )
-    ap.add_argument("--all", action="store_true", help="run both layers (lint + jaxpr audit)")
+    ap.add_argument("--all", action="store_true", help="run every layer (lint + audit + docs)")
     ap.add_argument("--lint", action="store_true", help="run the lint layer (default)")
     ap.add_argument("--audit", action="store_true", help="run the jaxpr contract audit layer")
+    ap.add_argument("--docs", action="store_true", help="run the doc-lint layer (snippets + links)")
     ap.add_argument("--rules", nargs="*", default=[], metavar="R", help="restrict lint to rules")
     ap.add_argument("--explain", metavar="RULE", help="print a rule's rationale and exit")
     ap.add_argument("--update-allowlist", action="store_true", help="regenerate the baseline")
@@ -53,15 +61,17 @@ def main(argv: list[str] | None = None) -> int:
     args = ap.parse_args(argv)
 
     if args.explain:
-        text = RULE_EXPLAIN.get(args.explain)
+        text = RULE_EXPLAIN.get(args.explain) or DOC_RULE_EXPLAIN.get(args.explain)
         if text is None:
-            print(f"unknown rule {args.explain!r}; have {ALL_RULES}")
+            known = ALL_RULES + tuple(DOC_RULE_EXPLAIN)
+            print(f"unknown rule {args.explain!r}; have {known}")
             return 2
         print(text)
         return 0
 
-    run_lint_layer = args.lint or args.all or not args.audit
+    run_lint_layer = args.lint or args.all or not (args.audit or args.docs)
     run_audit_layer = args.audit or args.all
+    run_docs_layer = args.docs or args.all
     rc = 0
 
     if run_lint_layer:
@@ -96,6 +106,16 @@ def main(argv: list[str] | None = None) -> int:
         print(f"audit: {len(report['cells'])} cells traced, {len(bad)} violating{status}")
         if bad:
             rc = 1
+
+    if run_docs_layer:
+        doc_findings = run_doclint(args.root)
+        for f in doc_findings:
+            print(f.render())
+        if doc_findings:
+            print(f"docs: {len(doc_findings)} finding(s) — FAIL")
+            rc = 1
+        else:
+            print(f"docs: clean ({len(doc_files(args.root))} file(s) checked)")
 
     return rc
 
